@@ -1,0 +1,48 @@
+"""Paper Table I / Fig. 6-7: resource-allocation ratio vs layer count and
+hidden size, per compile mode (O0/O1/O3), from the Tier-1 section engine.
+
+The paper varies GPT-2-style decoder blocks; we sweep the same knobs on a
+granite-family reduced block over the 16x16 production mesh config."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from benchmarks.common import timeit_us
+from repro.configs import ARCHS, MeshConfig, ShapeConfig, reduced
+from repro.core import sections
+
+
+def run():
+    rows = []
+    mesh = MeshConfig()          # 16x16
+    base = ARCHS["granite-3-8b"]
+    shape = ShapeConfig("bench", "train", 1024, 64)
+    # --- layers sweep (paper Table I) ---
+    for L in (6, 12, 24, 48):
+        cfg = dataclasses.replace(base, num_layers=L)
+        t0 = time.perf_counter()
+        reps = {m: sections.analyze(cfg, shape, mesh, m) for m in
+                ("O0", "O1", "O3")}
+        us = (time.perf_counter() - t0) * 1e6
+        for m, rep in reps.items():
+            rows.append((f"allocation/layers{L}/{m}", us / 3,
+                         f"alloc={rep.allocation:.4f}"))
+    # --- hidden-size sweep (paper Fig. 7b) ---
+    for hs in (512, 1024, 2048, 4096):
+        nq = max(4, hs // 128)
+        cfg = dataclasses.replace(base, d_model=hs, d_ff=4 * hs,
+                                  num_heads=nq, num_kv_heads=max(1, nq // 4),
+                                  head_dim=128, num_layers=12)
+        t0 = time.perf_counter()
+        rep = sections.analyze(cfg, shape, mesh, "O3")
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"allocation/hs{hs}/O3", us,
+                     f"alloc={rep.allocation:.4f}"))
+    # --- per assigned arch: structural allocation at train_4k ---
+    from repro.configs import SHAPES
+    for name, cfg in ARCHS.items():
+        rep = sections.analyze(cfg, SHAPES["train_4k"], mesh, "O3")
+        rows.append((f"allocation/{name}/O3", 0.0,
+                     f"alloc={rep.allocation:.4f}"))
+    return rows

@@ -1,0 +1,55 @@
+"""Paper Fig. 12 + Table IV: deployment optimization — throughput vs batch
+size and numeric precision, measured on reduced models on this host.
+
+Note: XLA:CPU emulates bf16 in f32, so the *measured* CPU precision delta
+understates TPU reality; the full-scale precision effect shows up in the
+dry-run roofline terms (bf16 halves the memory term), which we also emit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timeit_us
+from repro.configs import ARCHS, reduced
+from repro.models import build, Runtime
+from repro.models.frontends import synth_batch
+
+
+def run():
+    rows = []
+    cfg = reduced(ARCHS["qwen2.5-32b"], layers=4, d_model=256, d_ff=1024,
+                  vocab=2048)
+
+    # --- batch sweep (Fig. 12) ---
+    model = build(cfg, Runtime(attention_backend="dense"), jnp.float32)
+    params = model.init_params(jax.random.PRNGKey(0))
+    g = jax.jit(jax.grad(lambda p, b: model.loss(p, b)[0]))
+    S = 128
+    for B in (1, 2, 4, 8, 16, 32):
+        batch = synth_batch(cfg, B, S, kind="train")
+        us = timeit_us(g, params, batch, iters=3)
+        rows.append((f"deploy/batch{B}", us,
+                     f"tok_s={B * S / (us * 1e-6):.0f}"))
+
+    # --- precision sweep (Table IV) ---
+    for dt_name, dt in (("float32", jnp.float32), ("bfloat16", jnp.bfloat16)):
+        m = build(cfg, Runtime(attention_backend="dense"), dt)
+        p = m.init_params(jax.random.PRNGKey(0))
+        gg = jax.jit(jax.grad(lambda p, b: m.loss(p, b)[0]))
+        batch = synth_batch(cfg, 8, S, kind="train")
+        us = timeit_us(gg, p, batch, iters=3)
+        rows.append((f"deploy/precision_{dt_name}", us,
+                     f"tok_s={8 * S / (us * 1e-6):.0f}"))
+
+    # --- full-scale precision effect from the roofline (memory term) ---
+    import json
+    from pathlib import Path
+    rdir = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+    f = rdir / "granite-3-8b_train_4k_16x16.json"
+    if f.exists():
+        rl = json.loads(f.read_text())["roofline"]
+        rows.append(("deploy/precision_fullscale_bf16", 0.0,
+                     f"memory_s={rl['memory_s']:.2f};"
+                     "f32_would_be~2x_memory_term"))
+    return rows

@@ -1,0 +1,56 @@
+"""Kernel micro-benchmarks: Pallas (interpret on CPU) vs jnp stand-ins vs
+dense reference — correctness-weighted timing plus the structural flop
+accounting the roofline uses."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timeit_us
+from repro.kernels import ops, ref
+from repro.models.attention import chunked_attention
+from repro.models.ssm import chunked_linear_attention
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    B, S, Hq, Hkv, D = 1, 512, 4, 2, 64
+    q = jnp.asarray(rng.standard_normal((B, S, Hq, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, Hkv, D)), jnp.float32)
+    dense = jax.jit(lambda q, k, v: ref.flash_attention_ref(
+        q, k, v, causal=True))
+    chunked = jax.jit(lambda q, k, v: chunked_attention(
+        q, k, v, causal=True, chunk=128))
+    rows.append(("kernels/attn_dense_ref", timeit_us(dense, q, k, v), ""))
+    rows.append(("kernels/attn_chunked_jnp", timeit_us(chunked, q, k, v), ""))
+    rows.append(("kernels/attn_pallas_interp",
+                 timeit_us(lambda *a: ops.flash_attention(*a, causal=True),
+                           q, k, v, iters=2, warmup=1),
+                 "interpret-mode (CPU); real kernel on TPU"))
+
+    T, H, K = 256, 2, 64
+    q2 = jnp.asarray(rng.standard_normal((B, T, H, K)), jnp.float32)
+    k2 = jnp.asarray(rng.standard_normal((B, T, H, K)), jnp.float32)
+    v2 = jnp.asarray(rng.standard_normal((B, T, H, K)), jnp.float32)
+    ld = jnp.asarray(-np.exp(rng.standard_normal((B, T, H, K))), jnp.float32)
+    chunked_w = jax.jit(lambda *a: chunked_linear_attention(*a, chunk=64)[0])
+    rows.append(("kernels/wkv6_chunked_jnp",
+                 timeit_us(chunked_w, q2, k2, v2, ld), ""))
+    rows.append(("kernels/wkv6_pallas_interp",
+                 timeit_us(lambda *a: ops.wkv6(*a, chunk=64)[0],
+                           q2, k2, v2, ld, iters=2, warmup=1),
+                 "interpret-mode (CPU)"))
+
+    x = jnp.asarray(rng.standard_normal((4096, 512)), jnp.float32)
+    sc = jnp.ones((512,), jnp.float32)
+    rows.append(("kernels/rmsnorm_jnp",
+                 timeit_us(jax.jit(lambda x, s: ref.rmsnorm_ref(x, s)),
+                           x, sc), ""))
+    rows.append(("kernels/rmsnorm_pallas_interp",
+                 timeit_us(lambda x, s: ops.rmsnorm(x, s), x, sc,
+                           iters=2, warmup=1), "interpret-mode (CPU)"))
+    return rows

@@ -1,0 +1,50 @@
+"""Paper Fig. 8: load imbalance (LI, Eq. 3/4) vs layer count and hidden
+size under O1/O3 partitioning, plus MoE expert-load LI measured on a real
+routed forward pass (a dimension the paper's dense blocks don't have)."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timeit_us
+from repro.configs import ARCHS, MeshConfig, ShapeConfig, reduced
+from repro.core import metrics, sections
+
+
+def run():
+    rows = []
+    mesh = MeshConfig()
+    base = ARCHS["granite-3-8b"]
+    shape = ShapeConfig("bench", "train", 1024, 64)
+    for L in (6, 12, 24, 48):
+        cfg = dataclasses.replace(base, num_layers=L)
+        for m in ("O1", "O3"):
+            rep = sections.analyze(cfg, shape, mesh, m)
+            rows.append((f"load_balance/layers{L}/{m}", 0.0,
+                         f"LI={rep.load_imbalance:.4f}"))
+    for hs in (512, 1024, 2048, 4096):
+        nq = max(4, hs // 128)
+        cfg = dataclasses.replace(base, d_model=hs, d_ff=4 * hs,
+                                  num_heads=nq, num_kv_heads=max(1, nq // 4),
+                                  head_dim=128, num_layers=12)
+        for m in ("O1", "O3"):
+            rep = sections.analyze(cfg, shape, mesh, m)
+            rows.append((f"load_balance/hs{hs}/{m}", 0.0,
+                         f"LI={rep.load_imbalance:.4f}"))
+
+    # measured MoE expert-load LI on a reduced arctic block
+    cfg = reduced(ARCHS["arctic-480b"], experts=8)
+    from repro.models import moe as moe_mod
+    p = moe_mod.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 64, cfg.d_model)) * 0.1
+    fn = jax.jit(lambda p, x: moe_mod.moe_ffn(p, x, cfg)[1]["expert_load"])
+    us = timeit_us(fn, p, x)
+    load = np.asarray(fn(p, x))
+    li = metrics.expert_load_imbalance(load)
+    rows.append(("load_balance/moe_experts/measured", us,
+                 f"LI={li:.4f}"))
+    return rows

@@ -1,0 +1,40 @@
+"""Paper Fig. 10: roofline models. Emits arithmetic intensity (Eq. 5) and
+the three roofline terms for every dry-run cell; classifies each as
+compute-/memory-/collective-bound (the paper's WSE vs RDU/IPU split)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import ARCHS, SHAPES
+from repro.core import metrics
+
+RDIR = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def run():
+    rows = []
+    for f in sorted(RDIR.glob("*_16x16.json")):
+        rec = json.loads(f.read_text())
+        rl = rec.get("roofline")
+        if not rl:
+            continue
+        arch = ARCHS.get(rec["arch"])
+        shape = SHAPES.get(rec["shape"])
+        ai = 0.0
+        if arch and shape:
+            act = metrics.activation_bytes_estimate(
+                arch.num_layers + arch.encoder_layers, shape.global_batch,
+                shape.seq_len, arch.d_model)
+            ai = metrics.arithmetic_intensity(
+                arch.active_param_count(), shape.global_batch,
+                shape.seq_len, act)
+        rows.append((
+            f"roofline/{rec['arch']}/{rec['shape']}", 0.0,
+            f"dom={rl['dominant']};c={rl['compute_s']:.3e};"
+            f"m={rl['memory_s']:.3e};n={rl['collective_s']:.3e};"
+            f"AI={ai:.1f};mfu={rl.get('mfu') or 0:.3f}"))
+    if not rows:
+        rows.append(("roofline/no_dryrun_artifacts", 0.0,
+                     "run launch/dryrun.py first"))
+    return rows

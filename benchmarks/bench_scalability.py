@@ -1,0 +1,98 @@
+"""Paper Table III / Fig. 11: inter-chip scalability, MEASURED on an
+8-fake-device host mesh with reduced models:
+
+* DP replicas (WSE-style intra-chip data parallelism, Fig. 11a)
+* TP width sweep (RDU-style tensor parallelism, Fig. 11b)
+* PP layer-allocation sweep (IPU-style, Fig. 11c: most-loaded stage governs)
+* resident vs streaming (FSDP) weights — the paper's whole-graph vs
+  weight-streaming comparison (~20% claimed overhead on WSE-2).
+"""
+from __future__ import annotations
+
+from benchmarks.common import run_with_devices
+
+_CODE = r"""
+import time
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import ARCHS, MeshConfig, RunConfig, ShapeConfig, reduced
+from repro.launch.mesh import make_mesh
+from repro.models import build
+from repro.models.frontends import synth_batch
+from repro.parallel import sharding as shd
+from repro.runtime.steps import build_train_step, make_runtime
+
+def measure(fn, args, iters=4):
+    out = fn(*args); jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+cfg = reduced(ARCHS["granite-3-8b"], layers=4, d_model=256, d_ff=1024,
+              vocab=2048)
+B, S = 16, 128
+tokens = B * S
+
+def step_time(mesh_shape, axes, exec_mode="resident"):
+    mesh_cfg = MeshConfig(shape=mesh_shape, axes=axes)
+    rcfg = RunConfig(model=cfg, shape=ShapeConfig("t", "train", S, B),
+                     mesh=mesh_cfg, param_dtype="float32",
+                     attention_backend="dense", exec_mode=exec_mode)
+    mesh = make_mesh(mesh_cfg)
+    with jax.set_mesh(mesh):
+        step, model, opt = build_train_step(rcfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        pspecs = shd.param_pspecs(params, cfg, rcfg)
+        params = jax.tree.map(lambda x, s: jax.device_put(
+            x, NamedSharding(mesh, s)), params, pspecs,
+            is_leaf=lambda x: not isinstance(x, dict))
+        opt_state = opt.init(params)
+        batch = synth_batch(cfg, B, S, kind="train")
+        fn = jax.jit(step)
+        return measure(fn, (params, opt_state, batch))
+
+# DP scaling (Fig 11a): 1 -> 8 data shards
+for dp in (1, 2, 4, 8):
+    t = step_time((dp, 1), ("data", "model"))
+    print(f"scalability/dp{dp},{t*1e6:.0f},tok_s={tokens/t:.0f}")
+# TP sweep (Fig 11b)
+for tp in (1, 2, 4, 8):
+    t = step_time((8 // tp, tp), ("data", "model"))
+    print(f"scalability/tp{tp},{t*1e6:.0f},tok_s={tokens/t:.0f}")
+# resident vs streaming (weight-streaming overhead, Table III WSE column)
+t_res = step_time((4, 2), ("data", "model"), "resident")
+t_str = step_time((4, 2), ("data", "model"), "streaming")
+print(f"scalability/resident,{t_res*1e6:.0f},tok_s={tokens/t_res:.0f}")
+print(f"scalability/streaming,{t_str*1e6:.0f},"
+      f"tok_s={tokens/t_str:.0f};overhead={t_str/t_res-1:.2%}")
+
+# PP layer-allocation sweep (Fig 11c) on a 4-stage pipe
+from repro.parallel.pipeline import stack_stages, pipeline_forward
+mesh = make_mesh(MeshConfig(shape=(4,), axes=("model",)))
+L, D, M, MB, SS = 8, 256, 8, 2, 64
+params = {"w1": jax.random.normal(jax.random.PRNGKey(0), (L, D, D)) * 0.05,
+          "w2": jax.random.normal(jax.random.PRNGKey(1), (L, D, D)) * 0.05}
+x = jax.random.normal(jax.random.PRNGKey(2), (M, MB, SS, D))
+layer_fn = lambda c, p: c + jnp.tanh(c @ p["w1"]) @ p["w2"]
+for stage_layers in [(2, 2, 2, 2), (1, 2, 2, 3), (1, 1, 1, 5)]:
+    staged, mask = stack_stages(params, stage_layers)
+    with jax.set_mesh(mesh):
+        fn = jax.jit(lambda s, m, xx: pipeline_forward(s, m, xx, layer_fn))
+        t = measure(fn, (staged, mask, x))
+    name = "-".join(map(str, stage_layers))
+    print(f"scalability/pp_{name},{t*1e6:.0f},"
+          f"tok_s={M*MB*SS/t:.0f};max_stage={max(stage_layers)}")
+"""
+
+
+def run():
+    rows = []
+    out = run_with_devices(_CODE, n_devices=8, timeout=1200)
+    for line in out.strip().splitlines():
+        if line.count(",") >= 2:
+            name, us, derived = line.split(",", 2)
+            rows.append((name, float(us), derived))
+    return rows

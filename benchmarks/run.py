@@ -1,0 +1,61 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only <substr>]
+
+Prints ``name,us_per_call,derived`` CSV (one line per measurement).
+
+| module                 | paper artifact                          |
+|------------------------|-----------------------------------------|
+| bench_allocation       | Table I / Fig. 6-7 (allocation ratio)    |
+| bench_load_balance     | Fig. 8 (load imbalance, Eq. 3/4)         |
+| bench_efficiency       | Fig. 9 (TFLOPs vs model size)            |
+| bench_roofline         | Fig. 10 (roofline models)                |
+| bench_scalability      | Table III / Fig. 11 (DP/TP/PP, streaming)|
+| bench_batch_precision  | Fig. 12 / Table IV (deployment knobs)    |
+| bench_kernels          | kernel-level microbenchmarks             |
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+MODULES = [
+    "bench_allocation",
+    "bench_load_balance",
+    "bench_efficiency",
+    "bench_roofline",
+    "bench_scalability",
+    "bench_batch_precision",
+    "bench_kernels",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    failures = []
+    print("name,us_per_call,derived")
+    for mod_name in MODULES:
+        if args.only and args.only not in mod_name:
+            continue
+        try:
+            mod = __import__(f"benchmarks.{mod_name}",
+                             fromlist=["run"])
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception as e:
+            traceback.print_exc()
+            failures.append((mod_name, str(e)[:200]))
+            print(f"{mod_name}/FAILED,0,{e!r}", flush=True)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Batched serving example: prefill a batch of prompts, then decode with
+the jitted single-token step (ring-buffer cache for the sliding-window
+hybrid arch; recurrent state for rwkv6).
+
+    PYTHONPATH=src python examples/serve_batch.py [--arch hymba-1.5b]
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="hymba-1.5b")
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+    serve_main(["--arch", args.arch, "--batch", str(args.batch),
+                "--prompt-len", "64", "--max-new-tokens", "32"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""End-to-end training driver: a ~100M-parameter model trained for a few
+hundred steps with the full production substrate — sharded params,
+microbatched gradient accumulation, deterministic data pipeline, async
+checkpointing, auto-resume and the straggler watchdog.
+
+    PYTHONPATH=src python examples/train_e2e.py [--steps 300]
+
+(Re-run the same command to watch it resume from the checkpoint.)
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_e2e_ckpt")
+    args = ap.parse_args()
+    # ~100M params: 8 layers x d_model 768 (granite-family block)
+    res = train_main([
+        "--arch", "granite-3-8b",
+        "--steps", str(args.steps),
+        "--batch", "16", "--seq", "256",
+        "--layers", "8", "--d-model", "768",
+        "--microbatches", "2",
+        "--ckpt-dir", args.ckpt_dir,
+        "--ckpt-every", "100",
+        "--lr", "6e-4",
+    ])
+    print(f"\ntrained to step {res.final_step}; "
+          f"loss {res.losses[0]:.3f} -> {res.losses[-1]:.3f}; "
+          f"checkpoints at {args.ckpt_dir}: {res.checkpoints}")
+
+
+if __name__ == "__main__":
+    main()

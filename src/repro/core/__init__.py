@@ -1,0 +1,15 @@
+from repro.core.hlo_analysis import CostReport, HloAnalyzer, analyze_hlo, \
+    top_consumers
+from repro.core.metrics import (allocation_ratio, arithmetic_intensity,
+                                load_imbalance, weighted_allocation,
+                                weighted_load_imbalance)
+from repro.core.mesh_advisor import MeshAdvice, advise, best_mesh
+from repro.core.profiler import Tier1Report, profile
+from repro.core.roofline import RooflineReport, roofline
+
+__all__ = [
+    "CostReport", "HloAnalyzer", "MeshAdvice", "RooflineReport", "Tier1Report", "advise", "best_mesh",
+    "allocation_ratio", "analyze_hlo", "arithmetic_intensity",
+    "load_imbalance", "profile", "roofline", "top_consumers",
+    "weighted_allocation", "weighted_load_imbalance",
+]

@@ -1,0 +1,80 @@
+"""Tier-1 orchestrator: one call -> the paper's full intra-chip profile for
+a (model x shape x mesh) cell, combining
+
+* compiled-HLO metrics (when a dry-run artifact/HLO is available): FLOPs,
+  bytes, collectives, MXU-busy fraction;
+* structural metrics (always available): O0/O1/O3 section allocation &
+  load-imbalance (Eq. 2-4), arithmetic intensity (Eq. 5), roofline terms.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from repro.configs.base import MeshConfig, ModelConfig, ShapeConfig
+from repro.core import metrics, sections
+from repro.core.hlo_analysis import CostReport, analyze_hlo
+from repro.core.roofline import (HBM_BW, PEAK_FLOPS_BF16, RooflineReport,
+                                 model_flops_decode, model_flops_prefill,
+                                 model_flops_train, roofline)
+
+
+@dataclass
+class Tier1Report:
+    arch: str
+    shape: str
+    mesh: str
+    sections: Dict[str, dict]            # O0/O1/O3 -> SectionReport dict
+    arithmetic_intensity: float          # Eq. 5
+    roofline: Optional[dict] = None      # from compiled HLO when available
+    mxu_busy_fraction: Optional[float] = None
+    extras: dict = field(default_factory=dict)
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "sections": self.sections,
+            "arithmetic_intensity": self.arithmetic_intensity,
+            "roofline": self.roofline,
+            "mxu_busy_fraction": self.mxu_busy_fraction,
+            **self.extras,
+        }
+
+
+def model_flops_for(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    n_act = cfg.active_param_count()
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return model_flops_train(n_act, tokens)
+    if shape.kind == "prefill":
+        return model_flops_prefill(n_act, tokens)
+    return model_flops_decode(n_act, shape.global_batch)
+
+
+def profile(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshConfig,
+            hlo_text: Optional[str] = None,
+            hlo_report: Optional[CostReport] = None) -> Tier1Report:
+    sec = {m: sections.analyze(cfg, shape, mesh, m).to_dict()
+           for m in ("O0", "O1", "O3")}
+    act_bytes = metrics.activation_bytes_estimate(
+        cfg.num_layers + cfg.encoder_layers, shape.global_batch,
+        shape.seq_len, cfg.d_model)
+    ai = metrics.arithmetic_intensity(
+        cfg.active_param_count(), shape.global_batch, shape.seq_len,
+        act_bytes)
+    rl = None
+    mxu_busy = None
+    if hlo_report is None and hlo_text is not None:
+        hlo_report = analyze_hlo(hlo_text)
+    if hlo_report is not None:
+        rlr = roofline(hlo_report, chips=mesh.num_devices,
+                       model_flops=model_flops_for(cfg, shape))
+        rl = rlr.to_dict()
+        # MXU-busy fraction: time the matrix units have work vs roofline
+        # step time — the TPU stand-in for the paper's compute-PE allocation.
+        dot_time = hlo_report.dot_flops / PEAK_FLOPS_BF16
+        mxu_busy = dot_time / max(rlr.step_time_s, 1e-12)
+    return Tier1Report(
+        arch=cfg.name, shape=shape.name,
+        mesh="x".join(map(str, mesh.shape)), sections=sec,
+        arithmetic_intensity=ai, roofline=rl, mxu_busy_fraction=mxu_busy)

@@ -1,0 +1,53 @@
+"""Rendering helpers: turn dry-run JSON records and Tier-1/Tier-2 reports
+into the markdown tables EXPERIMENTS.md and the benchmark CSVs use."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Iterable, List, Optional
+
+
+def md_table(headers: List[str], rows: Iterable[Iterable]) -> str:
+    out = ["| " + " | ".join(headers) + " |",
+           "|" + "|".join("---" for _ in headers) + "|"]
+    for r in rows:
+        out.append("| " + " | ".join(str(x) for x in r) + " |")
+    return "\n".join(out)
+
+
+def fmt_s(x: Optional[float]) -> str:
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def fmt_gb(x: Optional[float]) -> str:
+    return "-" if x is None else f"{x:.2f}"
+
+
+def load_dryrun_records(results_dir: Path, mesh: str = "16x16") -> list:
+    recs = []
+    for f in sorted(results_dir.glob(f"*_{mesh}.json")):
+        recs.append(json.loads(f.read_text()))
+    return recs
+
+
+def roofline_table(recs: list) -> str:
+    headers = ["arch", "shape", "mesh", "compute", "memory", "collective",
+               "dominant", "MFU", "useful", "adj peak GB"]
+    rows = []
+    for r in recs:
+        rl = r.get("roofline", {})
+        rows.append([
+            r["arch"], r["shape"], r["mesh"],
+            fmt_s(rl.get("compute_s")), fmt_s(rl.get("memory_s")),
+            fmt_s(rl.get("collective_s")), rl.get("dominant", "-"),
+            f"{rl.get('mfu') or 0:.3f}",
+            f"{rl.get('useful_flops_ratio') or 0:.2f}",
+            fmt_gb(r.get("memory", {}).get("tpu_adjusted_peak_gb")),
+        ])
+    return md_table(headers, rows)

@@ -1,0 +1,109 @@
+"""Three-term roofline model for TPU v5e (the deployment target).
+
+    compute    = HLO_FLOPs   / (chips * 197e12 bf16 FLOP/s)
+    memory     = HLO_bytes   / (chips * 819e9  B/s HBM)
+    collective = ICI_bytes   / (chips * 50e9   B/s/link)
+
+HLO terms come from the per-device hlo_analysis report (so `chips` is
+already divided out — per-device seconds ARE the roofline terms).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from repro.core.hlo_analysis import CostReport
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # B/s
+ICI_BW_PER_LINK = 50e9            # B/s/link (per assignment: ~50 GB/s/link)
+HBM_PER_CHIP = 16e9               # bytes
+
+
+@dataclass
+class RooflineReport:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float      # raw operand-bytes sum (per spec)
+    collective_ici_bytes_per_device: float  # ring-model per-chip link traffic
+    model_flops: float = 0.0                # 6*N*D analytic (global)
+    chips: int = 1
+    collective_breakdown: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline-optimistic step time: max of the three terms (perfect
+        overlap assumption)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> Optional[float]:
+        """MODEL_FLOPS / HLO_FLOPs (global) — catches remat/redundancy."""
+        total = self.flops_per_device * self.chips
+        return self.model_flops / total if total else None
+
+    @property
+    def mfu(self) -> Optional[float]:
+        """Model-flops utilization at the roofline-optimistic step time."""
+        if not self.model_flops or not self.step_time_s:
+            return None
+        return self.model_flops / (self.chips * PEAK_FLOPS_BF16
+                                   * self.step_time_s)
+
+    def to_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "collective_ici_bytes_per_device":
+                self.collective_ici_bytes_per_device,
+            "model_flops": self.model_flops,
+            "chips": self.chips,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu": self.mfu,
+            "step_time_s": self.step_time_s,
+            "collective_breakdown": self.collective_breakdown,
+        }
+
+
+def roofline(report: CostReport, *, chips: int,
+             model_flops: float = 0.0) -> RooflineReport:
+    ici = report.collective_ici_bytes
+    return RooflineReport(
+        compute_s=report.flops / PEAK_FLOPS_BF16,
+        memory_s=report.bytes / HBM_BW,
+        collective_s=ici / ICI_BW_PER_LINK,
+        flops_per_device=report.flops,
+        bytes_per_device=report.bytes,
+        collective_bytes_per_device=report.collective_bytes,
+        collective_ici_bytes_per_device=ici,
+        model_flops=model_flops,
+        chips=chips,
+        collective_breakdown=report.collective_summary(),
+    )
+
+
+def model_flops_train(n_active_params: float, tokens: float) -> float:
+    return 6.0 * n_active_params * tokens
+
+
+def model_flops_decode(n_active_params: float, batch: float) -> float:
+    return 2.0 * n_active_params * batch
+
+
+def model_flops_prefill(n_active_params: float, tokens: float) -> float:
+    return 2.0 * n_active_params * tokens

@@ -1,0 +1,94 @@
+"""Tier-2: inter-chip scalability + deployment optimization (§IV.C / §VI).
+
+Two complementary modes, mirroring the paper's methodology:
+
+* ``scaling_table``  — analytic: roofline terms of one cell across mesh
+  splits (DP-heavy ... TP-heavy, optional PP stages), classifying each the
+  way the paper classifies WSE/RDU/IPU scaling (which term saturates first).
+* ``measure_*``      — empirical on THIS host (CPU, small mesh, reduced
+  configs): wall-clock throughput vs batch size / precision / mesh split,
+  validating the paper's Tier-2 claims (batch-size scaling, precision
+  sensitivity, PP bottleneck = most-loaded stage).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MeshConfig, ModelConfig, ShapeConfig
+
+
+@dataclass
+class ScalePoint:
+    name: str
+    devices: int
+    throughput: float            # tokens/s (measured) or 1/step_s (analytic)
+    step_time_s: float
+    extras: dict
+
+
+def measure_step(fn: Callable, args: tuple, *, iters: int = 5,
+                 warmup: int = 2) -> float:
+    """Median wall-clock seconds for a jitted step on this host."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def measure_batch_sweep(step_builder: Callable[[int], tuple],
+                        batch_sizes: Sequence[int]) -> List[ScalePoint]:
+    """Paper Fig. 12: throughput vs batch size. step_builder(b) returns
+    (fn, args, tokens_per_step)."""
+    out = []
+    for b in batch_sizes:
+        fn, args, tokens = step_builder(b)
+        s = measure_step(fn, args)
+        out.append(ScalePoint(name=f"batch{b}", devices=jax.device_count(),
+                              throughput=tokens / s, step_time_s=s,
+                              extras={"batch": b}))
+    return out
+
+
+def measure_precision_sweep(step_builder: Callable[[str], tuple],
+                            dtypes: Sequence[str] = ("float32", "bfloat16"),
+                            ) -> List[ScalePoint]:
+    """Paper Table IV: throughput per numeric format."""
+    out = []
+    for dt in dtypes:
+        fn, args, tokens = step_builder(dt)
+        s = measure_step(fn, args)
+        out.append(ScalePoint(name=dt, devices=jax.device_count(),
+                              throughput=tokens / s, step_time_s=s,
+                              extras={"dtype": dt}))
+    return out
+
+
+def pp_bottleneck_model(stage_layers: Sequence[int],
+                        per_layer_time: float, n_microbatches: int) -> float:
+    """Paper Fig. 11(c): GPipe step time is governed by the most-loaded
+    stage: (M + S - 1) * max_stage_time."""
+    S = len(stage_layers)
+    tmax = max(stage_layers) * per_layer_time
+    return (n_microbatches + S - 1) * tmax
+
+
+def pp_throughput_ratio(stage_layers: Sequence[int],
+                        n_microbatches: int) -> float:
+    """Relative throughput of a PP split vs a perfectly balanced one."""
+    S = len(stage_layers)
+    balanced = sum(stage_layers) / S
+    return balanced / max(stage_layers) * (n_microbatches /
+                                           (n_microbatches + S - 1))

@@ -1,0 +1,76 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+On this CPU container the kernels execute in interpret mode (the kernel
+body runs as Python/XLA on CPU); on TPU `interpret=False` compiles real
+Mosaic kernels. The model layer selects these via backend='pallas'.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import (flash_attention_bwd,
+                                           flash_attention_fwd)
+from repro.kernels.rmsnorm import rmsnorm_fwd
+from repro.kernels.rwkv6 import wkv6_fwd
+
+_ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+INTERPRET = not _ON_TPU
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash_attention(q, k, v, causal, window, block_q, block_k):
+    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=INTERPRET)
+
+
+def _fa_fwd(q, k, v, causal, window, block_q, block_k):
+    o, lse = flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                 block_q=block_q, block_k=block_k,
+                                 interpret=INTERPRET, return_lse=True)
+    return o, (q, k, v, o, lse)
+
+
+def _fa_bwd(causal, window, block_q, block_k, res, do):
+    q, k, v, o, lse = res
+    return flash_attention_bwd(q, k, v, o, lse, do, causal=causal,
+                               window=window, block_q=block_q,
+                               block_k=block_k, interpret=INTERPRET)
+
+
+_flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128):
+    """Differentiable flash attention: Pallas forward AND backward kernels
+    (dq + dkv with saved logsumexp), custom_vjp-wired."""
+    return _flash_attention(q, k, v, causal, window, block_q, block_k)
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def wkv6(q, k, v, ld, u=None, initial_state=None, *, chunk: int = 64):
+    """Matches models.ssm.linear_attention's (o, state) contract. A nonzero
+    initial_state is folded in by running the state-only recurrence first."""
+    o, state = wkv6_fwd(q, k, v, ld, u, chunk=chunk, interpret=INTERPRET)
+    if initial_state is not None:
+        # contribution of the carried-in state: q'_t @ (decay_t . S0)
+        f32 = jnp.float32
+        p_exc = jnp.cumsum(ld.astype(f32), axis=1) - (
+            0.0 if u is None else ld.astype(f32))
+        extra = jnp.einsum("bthk,bhkv->bthv",
+                           q.astype(f32) * jnp.exp(p_exc),
+                           initial_state.astype(f32))
+        o = o + extra.astype(o.dtype)
+        total_decay = jnp.exp(jnp.sum(ld.astype(f32), axis=1))  # (B,H,K)
+        state = state + total_decay[..., None] * initial_state
+    return o, state
+
+
+@partial(jax.jit, static_argnames=("eps",))
+def rmsnorm(x, scale, *, eps: float = 1e-5):
+    return rmsnorm_fwd(x, scale, eps=eps, interpret=INTERPRET)

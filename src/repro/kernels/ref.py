@@ -1,0 +1,24 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert_allclose against
+these across shape/dtype sweeps)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import dense_attention
+from repro.models.ssm import recurrent_linear_attention
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    return dense_attention(q, k, v, causal=causal, window=window)
+
+
+def wkv6_ref(q, k, v, ld, u=None):
+    """Exact per-token recurrence (models/ssm.py oracle)."""
+    return recurrent_linear_attention(q, k, v, ld, u)
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale).astype(x.dtype)

@@ -1,0 +1,42 @@
+"""Fused RMSNorm(+scale) — Pallas TPU kernel. One row-block per grid step,
+mean-square in f32, single pass over VMEM-resident rows."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, scale_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(ms + eps)
+                  * scale_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def rmsnorm_fwd(x, scale, *, eps: float = 1e-5, block_rows: int = 256,
+                interpret: bool = False):
+    """x: (..., d); scale: (d,). Fused in one VMEM pass per row block."""
+    orig_shape = x.shape
+    d = x.shape[-1]
+    rows = 1
+    for s in x.shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    br = min(block_rows, rows)
+    pad = (-rows) % br
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    n = x2.shape[0] // br
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(n,),
+        in_specs=[pl.BlockSpec((br, d), lambda i: (i, 0)),
+                  pl.BlockSpec((d,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x.dtype),
+        interpret=interpret,
+    )(x2, scale)
+    return out[:rows].reshape(orig_shape)

@@ -1,0 +1,70 @@
+"""Per-(arch x shape) run configuration: execution mode, microbatch count
+and attention chunking chosen so every cell fits v5e HBM on the production
+mesh. These are the BASELINE settings the dry-run lowers; §Perf hillclimbs
+override them explicitly.
+"""
+from __future__ import annotations
+
+from repro.configs import ARCHS, SHAPES, MeshConfig, RunConfig, get_arch
+from repro.launch.mesh import mesh_config
+
+
+def default_microbatches(arch, shape, mesh_cfg: MeshConfig) -> int:
+    if shape.kind != "train":
+        return 1
+    data = mesh_cfg.data_size
+    # one sequence per data shard per microbatch for wide models; more for
+    # narrow ones. Must divide the global batch.
+    if arch.d_model >= 4096:
+        per_shard = 1
+    elif arch.d_model >= 2048:
+        per_shard = 2
+    else:
+        per_shard = 4
+    mb_size = min(shape.global_batch, per_shard * data)
+    n_mb = max(1, shape.global_batch // mb_size)
+    while shape.global_batch % n_mb:
+        n_mb -= 1
+    return n_mb
+
+
+def cell_run_config(arch_name: str, shape_name: str, *,
+                    multi_pod: bool = False,
+                    exec_mode: str = "streaming",
+                    attention_backend: str = "chunked") -> RunConfig:
+    arch = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    mesh = mesh_config(multi_pod=multi_pod)
+    chunk = 2048 if shape.seq_len > 8192 else 1024
+    # 400-480B MoE on 16 GB/chip: f32 AdamW state alone is ~22 GB/chip, so
+    # these archs train with blockwise-int8 state, no master copy and bf16
+    # gradient accumulation (8-bit-Adam-style memory policy).
+    big = arch.param_count() > 2e11
+    return RunConfig(
+        model=arch,
+        shape=shape,
+        mesh=mesh,
+        exec_mode=exec_mode,
+        microbatches=default_microbatches(arch, shape, mesh),
+        remat=True,
+        attention_backend=attention_backend,
+        attention_chunk=chunk,
+        decode_attention="partitioned",
+        opt_state_dtype="int8" if big else "float32",
+        opt_master=not big,
+        grad_accum_dtype="bfloat16" if big else "float32",
+    )
+
+
+def valid_cell(arch_name: str, shape_name: str) -> bool:
+    arch = get_arch(arch_name)
+    if shape_name == "long_500k" and not arch.sub_quadratic:
+        return False   # noted skip: full-attention archs (DESIGN.md)
+    return True
+
+
+def all_cells():
+    for arch_name in ARCHS:
+        for shape_name in SHAPES:
+            if valid_cell(arch_name, shape_name):
+                yield arch_name, shape_name

@@ -1,0 +1,253 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST be the first two lines: jax locks the device count on first init.
+# The dry-run (and ONLY the dry-run) needs 512 placeholder host devices so
+# jax.make_mesh can build the production (2,16,16)/(16,16) meshes.
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import RunConfig, get_arch, SHAPES  # noqa: E402
+from repro.core.hlo_analysis import analyze_hlo        # noqa: E402
+from repro.core.roofline import (                      # noqa: E402
+    model_flops_decode, model_flops_prefill, model_flops_train, roofline)
+from repro.launch.cells import all_cells, cell_run_config  # noqa: E402
+from repro.launch.mesh import make_production_mesh     # noqa: E402
+from repro.models.frontends import (                   # noqa: E402
+    prefill_batch_spec, train_batch_spec)
+from repro.optim.adamw import AdamWState               # noqa: E402
+from repro.parallel import sharding as shd             # noqa: E402
+from repro.runtime.steps import (                      # noqa: E402
+    build_decode_step, build_prefill_step, build_train_step, make_model,
+    make_optimizer)
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+_DT_BYTES = {"f32": 4, "bf16": 2, "s8": 1, "s32": 4, "pred": 1}
+
+
+def _cpu_f32_duplicates(text: str, min_bytes: float = 2.56e8) -> float:
+    """Total bytes of distinct large f32 shapes that also exist at a narrow
+    dtype (bf16/s8) — XLA:CPU float-normalization duplicates that a TPU
+    compilation would not materialize. Heuristic: counts each shape once."""
+    import re as _re
+    shapes: dict = {}
+    for m in _re.finditer(r"= ([a-z0-9]+)\[([0-9,]+)\]", text):
+        dt, dims = m.groups()
+        if dt not in ("f32", "bf16", "s8"):
+            continue
+        n = 1
+        for d in dims.split(","):
+            n *= int(d)
+        shapes.setdefault(dims, set()).add(dt)
+    total = 0.0
+    for dims, dts in shapes.items():
+        if "f32" not in dts or not ({"bf16", "s8"} & dts):
+            continue
+        n = 1
+        for d in dims.split(","):
+            n *= int(d)
+        if n * 4 >= min_bytes:
+            total += n * 4
+    return total
+
+
+def _named(mesh, pspec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), pspec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def input_specs(rcfg: RunConfig, mesh):
+    """ShapeDtypeStruct stand-ins + shardings for every model input of the
+    cell's step function. Returns (args, in_shardings, out_shardings,
+    donate_argnums, step_fn)."""
+    arch, shape = rcfg.model, rcfg.shape
+    key = jax.random.PRNGKey(0)
+    B, S = shape.global_batch, shape.seq_len
+    bspec = shd.batch_spec(rcfg.mesh, B)
+
+    def batch_shardings(spec_dict):
+        out = {}
+        for name, (shp, _) in spec_dict.items():
+            out[name] = NamedSharding(
+                mesh, P(bspec, *([None] * (len(shp) - 1))))
+        return out
+
+    def batch_structs(spec_dict):
+        return {k: jax.ShapeDtypeStruct(shp, dt)
+                for k, (shp, dt) in spec_dict.items()}
+
+    if shape.kind == "train":
+        step, model, opt = build_train_step(rcfg)
+        params_shape = jax.eval_shape(model.init_params, key)
+        opt_shape = jax.eval_shape(opt.init, params_shape)
+        pspecs = shd.param_pspecs(params_shape, arch, rcfg)
+        param_sh = _named(mesh, pspecs)
+        opt_sh = shd.opt_state_shardings(opt_shape, pspecs, mesh, rcfg.mesh)
+        bspec_dict = train_batch_spec(arch, B, S)
+        args = (params_shape, opt_shape, batch_structs(bspec_dict))
+        in_sh = (param_sh, opt_sh, batch_shardings(bspec_dict))
+        out_sh = (param_sh, opt_sh, None)
+        return args, in_sh, out_sh, (0, 1), step
+
+    if shape.kind == "prefill":
+        step, model = build_prefill_step(rcfg)
+        params_shape = jax.eval_shape(model.init_params, key)
+        pspecs = shd.param_pspecs(params_shape, arch, rcfg)
+        param_sh = _named(mesh, pspecs)
+        bspec_dict = prefill_batch_spec(arch, B, S)
+        caches_shape = jax.eval_shape(
+            lambda: model.cache_init(B, S, enc_len=S))
+        cache_sh = _named(mesh, shd.cache_pspecs(caches_shape, arch, rcfg, B))
+        args = (params_shape, batch_structs(bspec_dict))
+        in_sh = (param_sh, batch_shardings(bspec_dict))
+        out_sh = (None, cache_sh)
+        return args, in_sh, out_sh, (), step
+
+    # decode
+    step, model = build_decode_step(rcfg)
+    params_shape = jax.eval_shape(model.init_params, key)
+    pspecs = shd.param_pspecs(params_shape, arch, rcfg)
+    param_sh = _named(mesh, pspecs)
+    caches_shape = jax.eval_shape(lambda: model.cache_init(B, S, enc_len=S))
+    cache_sh = _named(mesh, shd.cache_pspecs(caches_shape, arch, rcfg, B))
+    token = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    args = (params_shape, caches_shape, token, pos)
+    in_sh = (param_sh, cache_sh, NamedSharding(mesh, P(bspec, None)),
+             NamedSharding(mesh, P()))
+    out_sh = (None, cache_sh)
+    return args, in_sh, out_sh, (1,), step
+
+
+def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
+             save_hlo: bool = False, rcfg: RunConfig = None,
+             tag: str = "") -> dict:
+    if rcfg is not None and rcfg.mesh != (
+            cell_run_config(arch_name, shape_name,
+                            multi_pod=multi_pod).mesh):
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh(rcfg.mesh)      # §Perf mesh-split exploration
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    rcfg = rcfg or cell_run_config(arch_name, shape_name,
+                                   multi_pod=multi_pod)
+    arch, shape = rcfg.model, rcfg.shape
+    rec = {
+        "arch": arch_name, "shape": shape_name,
+        "mesh": "x".join(map(str, rcfg.mesh.shape)),
+        "devices": rcfg.mesh.num_devices,
+        "exec_mode": rcfg.exec_mode, "microbatches": rcfg.microbatches,
+        "multi_pod": multi_pod,
+    }
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        args, in_sh, out_sh, donate, step = input_specs(rcfg, mesh)
+        lowered = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=donate).lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t0 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t0, 2)
+        ma = compiled.memory_analysis()
+        print(ma)
+        ca = compiled.cost_analysis()
+        print({k: v for k, v in (ca or {}).items()
+               if k in ("flops", "bytes accessed")})
+    text = compiled.as_text()
+    if ma is not None:
+        rec["memory"] = {
+            "argument_gb": ma.argument_size_in_bytes / 1e9,
+            "output_gb": ma.output_size_in_bytes / 1e9,
+            "temp_gb": ma.temp_size_in_bytes / 1e9,
+            "alias_gb": ma.alias_size_in_bytes / 1e9,
+            "peak_gb": (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                        + ma.output_size_in_bytes
+                        - ma.alias_size_in_bytes) / 1e9,
+        }
+        # XLA:CPU's float-normalization materializes full f32 duplicates of
+        # bf16/int8 buffers (TPU computes bf16 natively and tiles the int8
+        # optimizer decode). Discount one instance of each distinct >=256MB
+        # f32 shape that has a narrow twin; report both raw and adjusted.
+        rec["memory"]["cpu_f32_dup_gb"] = _cpu_f32_duplicates(text) / 1e9
+        rec["memory"]["tpu_adjusted_peak_gb"] = (
+            rec["memory"]["peak_gb"] - rec["memory"]["cpu_f32_dup_gb"])
+    if ca:
+        rec["xla_cost"] = {"flops_once_through": ca.get("flops", 0.0),
+                           "bytes_once_through": ca.get("bytes accessed", 0.0)}
+    report = analyze_hlo(text)
+    n_act = arch.active_param_count()
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        mf = model_flops_train(n_act, tokens)
+    elif shape.kind == "prefill":
+        mf = model_flops_prefill(n_act, tokens)
+    else:
+        mf = model_flops_decode(n_act, shape.global_batch)
+    rl = roofline(report, chips=rcfg.mesh.num_devices, model_flops=mf)
+    rec["roofline"] = rl.to_dict()
+    rec["hlo"] = {
+        "flops_per_device": report.flops,
+        "dot_flops_per_device": report.dot_flops,
+        "bytes_per_device": report.bytes,
+        "collective_bytes": report.collective_bytes,
+        "collective_ici_bytes": report.collective_ici_bytes,
+        "collective_breakdown": report.collective_summary(),
+        "n_collectives": len(report.collectives),
+        "warnings": report.warnings[:10],
+    }
+    if save_hlo:
+        hdir = RESULTS_DIR / "hlo"
+        hdir.mkdir(parents=True, exist_ok=True)
+        (hdir / f"{arch_name}_{shape_name}_{rec['mesh']}{tag}.hlo.txt"
+         ).write_text(text)
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    out = RESULTS_DIR / f"{arch_name}_{shape_name}_{rec['mesh']}{tag}.json"
+    out.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args()
+
+    cells = list(all_cells()) if args.all else [(args.arch, args.shape)]
+    failures = []
+    for arch_name, shape_name in cells:
+        t0 = time.time()
+        try:
+            rec = run_cell(arch_name, shape_name, multi_pod=args.multi_pod,
+                           save_hlo=args.save_hlo)
+            rl = rec["roofline"]
+            print(f"OK {arch_name:28s} {shape_name:12s} mesh={rec['mesh']:8s} "
+                  f"compile={rec['compile_s']:6.1f}s "
+                  f"peak={rec.get('memory', {}).get('peak_gb', -1):7.2f}GB "
+                  f"dominant={rl['dominant']:10s} "
+                  f"terms(c/m/n)=({rl['compute_s']:.3e},{rl['memory_s']:.3e},"
+                  f"{rl['collective_s']:.3e})s", flush=True)
+        except Exception as e:
+            traceback.print_exc()
+            failures.append((arch_name, shape_name, str(e)[:300]))
+            print(f"FAIL {arch_name} {shape_name}: {e}", flush=True)
+    print(f"\n{len(cells) - len(failures)}/{len(cells)} cells passed "
+          f"({'multi-pod' if args.multi_pod else 'single-pod'})")
+    for f in failures:
+        print("FAILED:", f)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+A function, not a module-level constant, so importing this module never
+touches jax device state (jax locks the device count on first init).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import MeshConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def mesh_config(*, multi_pod: bool = False) -> MeshConfig:
+    if multi_pod:
+        return MeshConfig(shape=(2, 16, 16), axes=("pod", "data", "model"))
+    return MeshConfig(shape=(16, 16), axes=("data", "model"))
+
+
+def make_mesh(mesh_cfg: MeshConfig):
+    """Build a jax Mesh for an arbitrary MeshConfig (tests use small ones)."""
+    return jax.make_mesh(
+        mesh_cfg.shape, mesh_cfg.axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(mesh_cfg.axes))

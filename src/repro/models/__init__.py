@@ -1,0 +1,4 @@
+from repro.models.model import Model, build
+from repro.models.transformer import Runtime
+
+__all__ = ["Model", "Runtime", "build"]

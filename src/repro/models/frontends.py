@@ -1,0 +1,54 @@
+"""Modality-frontend stubs + input specs.
+
+Per the assignment, [audio]/[vlm] entries specify the transformer BACKBONE
+only: the conv/mel (whisper) and patch-embedding (qwen2-vl, llama4 early
+fusion) frontends are stubs. input_spec() therefore hands the backbone
+precomputed frame/patch embeddings.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def train_batch_spec(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    """{name: (shape, dtype)} for one training batch."""
+    spec: dict = {}
+    if cfg.frontend == "vision_stub":
+        spec["embeds"] = ((batch, seq, cfg.d_model), jnp.bfloat16)
+        if cfg.rope == "mrope":
+            spec["positions"] = ((batch, 3, seq), jnp.int32)
+    elif cfg.frontend == "audio_stub":
+        spec["audio_embeds"] = ((batch, seq, cfg.d_model), jnp.bfloat16)
+        spec["tokens"] = ((batch, seq), jnp.int32)
+    else:
+        spec["tokens"] = ((batch, seq), jnp.int32)
+    spec["labels"] = ((batch, seq), jnp.int32)
+    return spec
+
+
+def prefill_batch_spec(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    spec = train_batch_spec(cfg, batch, seq)
+    spec.pop("labels")
+    return spec
+
+
+def synth_batch(cfg: ModelConfig, batch: int, seq: int, seed: int = 0,
+                kind: str = "train") -> dict:
+    """Deterministic synthetic batch matching the spec (smoke/bench use)."""
+    rng = np.random.default_rng(seed)
+    spec = (train_batch_spec if kind == "train" else prefill_batch_spec)(
+        cfg, batch, seq)
+    out = {}
+    for name, (shape, dtype) in spec.items():
+        if dtype == jnp.int32:
+            hi = cfg.vocab_size if name in ("tokens", "labels") else seq
+            out[name] = jnp.asarray(
+                rng.integers(0, hi, size=shape), jnp.int32)
+        else:
+            out[name] = jnp.asarray(
+                rng.standard_normal(shape) * 0.02, dtype)
+    return out

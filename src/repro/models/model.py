@@ -1,0 +1,166 @@
+"""Top-level model API: build(cfg, rt) -> Model with init/loss/prefill/decode.
+
+Input contract per family (see DESIGN.md):
+* dense/moe/ssm/hybrid : batch = {tokens:(B,S) i32, labels:(B,S) i32}
+* vlm / early-fusion   : batch = {embeds:(B,S,d), positions:(B,3,S) i32,
+                         labels:(B,S) i32}   (patch frontend stubbed)
+* audio (whisper)      : batch = {audio_embeds:(B,S,d), tokens:(B,S) i32,
+                         labels:(B,S) i32}   (conv/mel frontend stubbed)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tfm
+from repro.models.layers import (
+    embed_tokens,
+    embedding_init,
+    lm_logits,
+    norm_init,
+    apply_norm,
+    sinusoidal_positions,
+)
+from repro.models.transformer import Runtime
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    rt: Runtime
+    init_params: Callable
+    loss: Callable          # (params, batch) -> (loss, aux)
+    prefill: Callable       # (params, batch, cache_span) -> (logits, caches)
+    decode_step: Callable   # (params, caches, token_batch, pos) -> (logits, caches)
+    cache_init: Callable    # (batch,max_len,dtype) -> zeroed caches
+
+
+def build(cfg: ModelConfig, rt: Runtime, param_dtype=jnp.bfloat16) -> Model:
+    compute_dtype = param_dtype
+
+    # ----------------------------------------------------------- params
+    def init_params(key):
+        k_emb, k_dec, k_enc = jax.random.split(key, 3)
+        p = {
+            "embed": embedding_init(k_emb, cfg, param_dtype),
+            "layers": tfm.stack_init(k_dec, cfg, cfg.num_layers, param_dtype,
+                                     cross=cfg.is_enc_dec),
+            "final_norm": norm_init(cfg.d_model, cfg.norm),
+        }
+        if cfg.is_enc_dec:
+            p["enc_layers"] = tfm.stack_init(
+                k_enc, cfg, cfg.encoder_layers, param_dtype)
+            p["enc_norm"] = norm_init(cfg.d_model, cfg.norm)
+        return p
+
+    # ----------------------------------------------------------- helpers
+    def _embed_inputs(params, batch):
+        """Returns (x, positions) for the decoder stack."""
+        if cfg.frontend == "vision_stub" and "embeds" in batch:
+            x = batch["embeds"].astype(compute_dtype)
+            if cfg.rope == "mrope":
+                positions = batch["positions"]
+            else:
+                positions = jnp.arange(x.shape[1])[None]
+            return x, positions
+        tokens = batch["tokens"]
+        x = embed_tokens(params["embed"], tokens).astype(compute_dtype)
+        S = x.shape[1]
+        if cfg.rope == "sinusoidal":
+            x = x + sinusoidal_positions(S, cfg.d_model).astype(x.dtype)
+            positions = jnp.arange(S)[None]
+        elif cfg.rope == "mrope":
+            positions = jnp.broadcast_to(
+                jnp.arange(S)[None, None], (x.shape[0], 3, S))
+        else:
+            positions = jnp.arange(S)[None]
+        return x, positions
+
+    def _encode(params, batch):
+        x = batch["audio_embeds"].astype(compute_dtype)
+        x = x + sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)
+        x, _ = tfm.stack_apply(params["enc_layers"], x, cfg, rt,
+                               jnp.arange(x.shape[1])[None], causal=False)
+        return apply_norm(params["enc_norm"], x, cfg.norm)
+
+    # ----------------------------------------------------------- loss
+    def loss(params, batch):
+        enc_out = _encode(params, batch) if cfg.is_enc_dec else None
+        x, positions = _embed_inputs(params, batch)
+        x, aux = tfm.stack_apply(params["layers"], x, cfg, rt, positions,
+                                 enc_out=enc_out, causal=True)
+        x = apply_norm(params["final_norm"], x, cfg.norm)
+        logits = lm_logits(params["embed"], x, cfg.tie_embeddings,
+                           true_vocab=cfg.vocab_size)
+        logits = logits.astype(jnp.float32)
+        labels = batch["labels"]
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        nll = (logz - gold).mean()
+        total = nll + aux.get("aux_loss", 0.0)
+        aux_out = {"nll": nll, **{k: v for k, v in aux.items()}}
+        return total, aux_out
+
+    # ----------------------------------------------------------- prefill
+    def prefill(params, batch, cache_span: int):
+        enc_out = _encode(params, batch) if cfg.is_enc_dec else None
+        x, positions = _embed_inputs(params, batch)
+        x, layer_caches = tfm.stack_prefill(params["layers"], x, cfg, rt,
+                                            positions, enc_out=enc_out,
+                                            cache_span=cache_span)
+        caches = {"layers": layer_caches}
+        if cfg.is_enc_dec:  # split cross-attention cache out of layer caches
+            caches["cross"] = {"ck": layer_caches.pop("ck"),
+                               "cv": layer_caches.pop("cv")}
+        x_last = x[:, -1:]
+        x_last = apply_norm(params["final_norm"], x_last, cfg.norm)
+        logits = lm_logits(params["embed"], x_last, cfg.tie_embeddings,
+                           true_vocab=cfg.vocab_size)
+        return logits.astype(jnp.float32)[..., :cfg.vocab_size], caches
+
+    # ----------------------------------------------------------- decode
+    def decode_step(params, caches, token, pos):
+        """token: (B,1) i32; pos: scalar i32 (next position to write)."""
+        x = embed_tokens(params["embed"], token).astype(compute_dtype)
+        if cfg.rope == "sinusoidal":
+            # closed-form sinusoidal position embedding at runtime `pos`
+            d = cfg.d_model
+            half_idx = jnp.arange(0, d, 2)
+            ang = pos / jnp.power(10000.0, half_idx / d)
+            pe = jnp.zeros((d,), jnp.float32)
+            pe = pe.at[0::2].set(jnp.sin(ang)).at[1::2].set(jnp.cos(ang))
+            x = x + pe.astype(x.dtype)
+        cross = caches.get("cross")
+        x, new_layer_caches = tfm.stack_decode(
+            params["layers"], x, caches["layers"], pos, cfg, rt,
+            cross_caches=cross)
+        x = apply_norm(params["final_norm"], x, cfg.norm)
+        logits = lm_logits(params["embed"], x, cfg.tie_embeddings,
+                           true_vocab=cfg.vocab_size)
+        new_caches = dict(caches)
+        new_caches["layers"] = new_layer_caches
+        return logits.astype(jnp.float32)[..., :cfg.vocab_size], new_caches
+
+    # ----------------------------------------------------------- caches
+    def cache_init(batch: int, max_len: int, dtype=param_dtype,
+                   enc_len: int = 0):
+        caches = {"layers": tfm.cache_init(cfg, cfg.num_layers, batch,
+                                           max_len, dtype)}
+        if cfg.is_enc_dec:
+            enc_len = enc_len or max_len
+            hd, nkv = cfg.resolved_head_dim, cfg.num_kv_heads
+            caches["cross"] = {
+                "ck": jnp.zeros((cfg.num_layers, batch, enc_len, nkv, hd),
+                                dtype),
+                "cv": jnp.zeros((cfg.num_layers, batch, enc_len, nkv, hd),
+                                dtype),
+            }
+        return caches
+
+    return Model(cfg=cfg, rt=rt, init_params=init_params, loss=loss,
+                 prefill=prefill, decode_step=decode_step,
+                 cache_init=cache_init)

@@ -1,0 +1,50 @@
+"""Elastic re-meshing: survive a change in healthy device count.
+
+Protocol (what a 1000-node fleet controller would drive):
+1. detect device-count change (node died / capacity returned);
+2. pick the best mesh for the new count (`choose_mesh`);
+3. rebuild shardings for the new mesh and restore the last committed
+   checkpoint against them (`checkpoint.restore` re-lays-out every leaf);
+4. resume the deterministic data stream at the restored step.
+
+The cross-mesh portability comes from checkpoints storing full logical
+arrays — restore time re-shards, so 8->4 or 4->8 device transitions are a
+pure data-placement change. Exercised end-to-end in tests/test_runtime.py.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+
+from repro.configs.base import MeshConfig
+
+
+def choose_mesh(n_devices: int, *, prefer_model: int = 0) -> MeshConfig:
+    """Best (data, model) split for a device count: keep `model` a power of
+    two no larger than prefer_model (or sqrt n), rest data-parallel."""
+    if n_devices == 1:
+        return MeshConfig(shape=(1, 1), axes=("data", "model"))
+    model = prefer_model or 2 ** int(math.log2(max(1, int(n_devices ** 0.5))))
+    while n_devices % model:
+        model //= 2
+    return MeshConfig(shape=(n_devices // model, model),
+                      axes=("data", "model"))
+
+
+def remesh(ckpt_dir: str, step_tree_template, new_mesh_cfg: MeshConfig,
+           pspecs) -> Tuple[object, dict]:
+    """Build the new mesh and restore the latest checkpoint resharded onto
+    it. Returns (mesh, restored_tree)."""
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    from repro.checkpoint import checkpoint as ckpt
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh(new_mesh_cfg)
+    shardings = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), pspecs,
+        is_leaf=lambda x: isinstance(x, PartitionSpec))
+    step, tree = ckpt.restore_latest(ckpt_dir, step_tree_template, shardings)
+    return mesh, {"step": step, "tree": tree}

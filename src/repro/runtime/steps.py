@@ -1,0 +1,133 @@
+"""Step builders: train_step (microbatched grad accumulation + AdamW),
+prefill_step and decode_step — the three programs the dry-run lowers and the
+train/serve loops execute.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import build, Runtime
+from repro.models.frontends import prefill_batch_spec, train_batch_spec
+from repro.optim.adamw import AdamW, warmup_cosine
+from repro.parallel import sharding as shd
+
+
+def make_runtime(rcfg: RunConfig, *, for_decode: bool = False) -> Runtime:
+    gb = rcfg.shape.global_batch
+    mb = max(1, gb // max(rcfg.microbatches, 1)) if rcfg.shape.kind == "train" else gb
+    excl = ("pod",) if rcfg.ep_over_pod else ()
+    act = shd.act_pspec(rcfg.mesh, mb, excl)
+    if (rcfg.seq_shard and not for_decode
+            and rcfg.shape.seq_len % rcfg.mesh.model_size == 0):
+        act = P(act[0], "model", None)  # Megatron-style sequence parallelism
+    bspec = shd.batch_spec(rcfg.mesh, mb, excl) or ()
+    sizes = dict(zip(rcfg.mesh.axes, rcfg.mesh.shape))
+    dp_size = 1
+    for a in bspec:
+        dp_size *= sizes[a]
+    return Runtime(
+        attention_backend=rcfg.attention_backend,
+        ssm_backend="chunked",
+        chunk=rcfg.attention_chunk,
+        act_spec=act,
+        remat=rcfg.remat,
+        mesh_batch_axes=tuple(bspec),
+        dp_size=dp_size,
+        moe_shardmap=rcfg.model.moe is not None and rcfg.mesh.num_devices > 1,
+        ep_axes=("pod", "model") if rcfg.ep_over_pod else ("model",),
+        pin_mixer_output=rcfg.pin_mixer_output,
+        ssm_factored=rcfg.ssm_factored,
+        layers_per_block=rcfg.layers_per_block,
+        norm_local=rcfg.norm_local,
+    )
+
+
+def make_model(rcfg: RunConfig, *, for_decode: bool = False):
+    rt = make_runtime(rcfg, for_decode=for_decode)
+    return build(rcfg.model, rt, param_dtype=jnp.dtype(rcfg.param_dtype))
+
+
+def make_optimizer(rcfg: RunConfig, total_steps: int = 10000) -> AdamW:
+    return AdamW(lr_fn=warmup_cosine(rcfg.learning_rate, rcfg.warmup_steps,
+                                     total_steps),
+                 weight_decay=rcfg.weight_decay, grad_clip=rcfg.grad_clip,
+                 state_dtype=rcfg.opt_state_dtype,
+                 use_master=rcfg.opt_master)
+
+
+def build_train_step(rcfg: RunConfig, total_steps: int = 10000):
+    """Returns (train_step, model, optimizer). train_step signature:
+    (params, opt_state, batch) -> (params, opt_state, metrics).
+
+    The batch leaves carry the full global batch; gradient accumulation
+    splits it into `rcfg.microbatches` scanned microbatches, resharding each
+    onto the data axes.
+    """
+    model = make_model(rcfg)
+    opt = make_optimizer(rcfg, total_steps)
+    n_mb = max(1, rcfg.microbatches)
+    mesh_cfg = rcfg.mesh
+    gb = rcfg.shape.global_batch
+    mb_size = gb // n_mb
+    mb_spec = shd.batch_spec(mesh_cfg, mb_size)
+
+    def reshape_mb(x):
+        x = x.reshape(n_mb, mb_size, *x.shape[1:])
+        return shd.maybe_constrain(
+            x, P(None, mb_spec, *([None] * (x.ndim - 2))))
+
+    def train_step(params, opt_state, batch):
+        mbs = jax.tree.map(reshape_mb, batch)
+
+        acc_dt = jnp.dtype(rcfg.grad_accum_dtype)
+
+        def mb_body(gsum, mb):
+            (loss, aux), g = jax.value_and_grad(model.loss, has_aux=True)(
+                params, mb)
+            gsum = jax.tree.map(
+                lambda a, b: a + b.astype(acc_dt), gsum, g)
+            return gsum, loss
+
+        gzero = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+        if n_mb > 1:
+            grads, losses = jax.lax.scan(mb_body, gzero, mbs)
+            loss = losses.mean()
+        else:
+            grads, loss = mb_body(gzero, jax.tree.map(lambda x: x[0], mbs))
+        grads = jax.tree.map(lambda g: g / n_mb, grads)
+        new_params, new_opt, metrics = opt.update(grads, opt_state, params)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step, model, opt
+
+
+def build_prefill_step(rcfg: RunConfig):
+    model = make_model(rcfg)
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, rcfg.shape.seq_len)
+
+    return prefill_step, model
+
+
+def build_decode_step(rcfg: RunConfig):
+    import dataclasses as _dc
+    part = (rcfg.decode_attention == "partitioned"
+            and rcfg.model.attention_kind == "full"
+            and rcfg.shape.seq_len % rcfg.mesh.model_size == 0)
+    bspec = shd.batch_spec(rcfg.mesh, rcfg.shape.global_batch) or ()
+    rt = _dc.replace(make_runtime(rcfg, for_decode=True),
+                     decode_partitioned=part, mesh_batch_axes=tuple(bspec))
+    model = build(rcfg.model, rt, param_dtype=jnp.dtype(rcfg.param_dtype))
+
+    def decode_step(params, caches, token, pos):
+        return model.decode_step(params, caches, token, pos)
+
+    return decode_step, model

@@ -1,0 +1,48 @@
+"""Mesh advisor: analytic rankings must reproduce the measured §Perf
+findings (EXPERIMENTS.md) and respect basic invariants."""
+import pytest
+
+from repro.configs import ARCHS, SHAPES
+from repro.core.mesh_advisor import advise, best_mesh
+
+
+def _rank(archname):
+    return [a.mesh.shape for a in advise(ARCHS[archname], SHAPES["train_4k"])]
+
+
+def test_qwen110_prefers_narrow_model():
+    """Measured: (64,4) beat (16,16) 2.1x. Advisor must agree on order."""
+    ranks = _rank("qwen1.5-110b")
+    assert ranks.index((64, 4)) < ranks.index((16, 16))
+    assert ranks.index((32, 8)) < ranks.index((16, 16))
+
+
+def test_rwkv_prefers_pure_dp():
+    """Measured: (256,1) best. Advisor must rank DP-heavy splits first."""
+    ranks = _rank("rwkv6-3b")
+    assert ranks[0][1] <= 2              # model width 1 or 2 on top
+    assert ranks.index((256, 1)) < ranks.index((16, 16))
+
+
+def test_moe_prefers_wide_model():
+    """ZeRO-3 MoE gathers scale with P/model: wider model wins."""
+    ranks = _rank("arctic-480b")
+    assert ranks.index((4, 64)) < ranks.index((32, 8))
+
+
+def test_advice_invariants():
+    for name in ("granite-3-8b", "qwen2.5-32b", "arctic-480b"):
+        for a in advise(ARCHS[name], SHAPES["train_4k"]):
+            assert a.compute_s > 0 and a.memory_s > 0
+            assert a.hbm_gb > 0
+            assert a.mesh.num_devices == 256
+            assert SHAPES["train_4k"].global_batch % a.microbatches == 0
+    # compute term is split-invariant (same flops / chips)
+    adv = advise(ARCHS["granite-3-8b"], SHAPES["train_4k"])
+    cs = {round(a.compute_s, 6) for a in adv}
+    assert len(cs) == 1
+
+
+def test_best_mesh_fits():
+    a = best_mesh(ARCHS["qwen1.5-110b"], SHAPES["train_4k"])
+    assert a.fits

@@ -1,0 +1,55 @@
+"""Deliverable-integrity checks: the dry-run artifact matrix and the
+Tier-2 scalability helpers. Skipped gracefully on a fresh clone (run
+`python -m repro.launch.dryrun --all [--multi-pod]` to produce artifacts)."""
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.configs import ARCHS, SHAPES
+from repro.core.scalability import pp_bottleneck_model, pp_throughput_ratio
+from repro.launch.cells import all_cells
+
+RDIR = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def _have_matrix(mesh):
+    return RDIR.exists() and len(list(RDIR.glob(f"*_{mesh}.json"))) >= 32
+
+
+@pytest.mark.parametrize("mesh", ["16x16", "2x16x16"])
+def test_dryrun_matrix_complete(mesh):
+    if not _have_matrix(mesh):
+        pytest.skip(f"no {mesh} dry-run artifacts; run launch/dryrun.py")
+    cells = {(a, s) for a, s in all_cells()}
+    found = set()
+    for f in RDIR.glob(f"*_{mesh}.json"):
+        if "_opt" in f.name or "_nolicm" in f.name:
+            continue
+        rec = json.loads(f.read_text())
+        found.add((rec["arch"], rec["shape"]))
+        rl = rec["roofline"]
+        assert rl["compute_s"] > 0 and rl["memory_s"] > 0
+        assert rl["dominant"] in ("compute", "memory", "collective")
+        assert rec["hlo"]["flops_per_device"] > 0
+        # every train/prefill cell must move bytes over the interconnect
+        if rec["shape"] != "long_500k":
+            assert rec["hlo"]["collective_ici_bytes"] > 0
+    assert found == cells, (cells - found, found - cells)
+
+
+def test_40_cell_accounting():
+    assert len(ARCHS) * len(SHAPES) == 40
+    assert len(list(all_cells())) == 32   # + 8 noted long_500k skips
+
+
+def test_pp_models():
+    # balanced 4 stages beat a (1,1,1,5) split by ~max-stage ratio
+    t_bal = pp_bottleneck_model([2, 2, 2, 2], per_layer_time=1.0,
+                                n_microbatches=8)
+    t_skew = pp_bottleneck_model([1, 1, 1, 5], per_layer_time=1.0,
+                                 n_microbatches=8)
+    assert t_skew / t_bal == pytest.approx(5 / 2)
+    r = pp_throughput_ratio([2, 2, 2, 2], n_microbatches=8)
+    assert 0 < r <= 1
+    assert pp_throughput_ratio([1, 1, 1, 5], 8) < r

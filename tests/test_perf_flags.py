@@ -1,0 +1,53 @@
+"""§Perf optimization flags must not change the MATH — loss under every
+opt-in flag combination matches the baseline on a small mesh. (This is the
+'debug forward, keep the speedup' guard: a perf flag that breaks numerics
+fails here, not in EXPERIMENTS.md.)"""
+from conftest import run_with_devices
+
+
+def test_perf_flags_preserve_loss():
+    run_with_devices("""
+import dataclasses
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding
+from repro.configs import ARCHS, MeshConfig, RunConfig, ShapeConfig, reduced
+from repro.launch.mesh import make_mesh
+from repro.models.frontends import synth_batch
+from repro.parallel import sharding as shd
+from repro.runtime.steps import build_train_step
+
+def loss_with(arch, flags, mesh_cfg):
+    cfg = reduced(ARCHS[arch], layers=4, d_model=128, vocab=512)
+    rcfg = RunConfig(model=cfg, shape=ShapeConfig("t", "train", 64, 8),
+                     mesh=mesh_cfg, param_dtype="float32",
+                     attention_backend="dense", microbatches=2, **flags)
+    mesh = make_mesh(mesh_cfg)
+    with jax.set_mesh(mesh):
+        step, model, opt = build_train_step(rcfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        pspecs = shd.param_pspecs(params, cfg, rcfg)
+        params = jax.tree.map(lambda x, s: jax.device_put(
+            x, NamedSharding(mesh, s)), params, pspecs,
+            is_leaf=lambda x: not isinstance(x, dict))
+        opt_state = opt.init(params)
+        batch = synth_batch(cfg, 8, 64, kind="train")
+        _, _, m = jax.jit(step)(params, opt_state, batch)
+    return float(m["loss"])
+
+mesh = MeshConfig(shape=(4, 2), axes=("data", "model"))
+base = loss_with("granite-3-8b", {}, mesh)
+for flags in ({"pin_mixer_output": True}, {"layers_per_block": 2},
+              {"norm_local": True}):
+    got = loss_with("granite-3-8b", flags, mesh)
+    assert abs(got - base) < 1e-4, (flags, base, got)
+    print(flags, "ok", got)
+
+# ssm flags on rwkv
+base = loss_with("rwkv6-3b", {}, mesh)
+for flags in ({"ssm_factored": True}, {"ssm_tp": True},
+              {"ssm_factored": True, "ssm_tp": True}):
+    got = loss_with("rwkv6-3b", flags, mesh)
+    assert abs(got - base) < 1e-3, (flags, base, got)
+    print(flags, "ok", got)
+print("OK")
+""", n_devices=8, timeout=900)
