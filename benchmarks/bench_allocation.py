@@ -2,47 +2,82 @@
 hidden size, per compile mode (O0/O1/O3), from the Tier-1 section engine.
 
 The paper varies GPT-2-style decoder blocks; we sweep the same knobs on a
-granite-family reduced block over the 16x16 production mesh config."""
+granite-family reduced block over the 16x16 production mesh config. The
+sweeps are declared as :class:`Workload` data; the shared runner times,
+stamps, and sinks the records."""
 from __future__ import annotations
 
 import dataclasses
 import time
 
-from benchmarks.common import timeit_us
-from repro.configs import ARCHS, MeshConfig, ShapeConfig, reduced
-from repro.core import sections
+from repro.bench import (BENCH_MESH, BENCH_SHAPE, BenchRecord, Workload,
+                         scenario)
+from repro.configs import ARCHS, SHAPES
+
+COMPILE_MODES = ("O0", "O1", "O3")
 
 
-def run():
-    rows = []
-    mesh = MeshConfig()          # 16x16
-    base = ARCHS["granite-3-8b"]
-    shape = ShapeConfig("bench", "train", 1024, 64)
-    # --- layers sweep (paper Table I) ---
-    for L in (6, 12, 24, 48):
-        cfg = dataclasses.replace(base, num_layers=L)
-        t0 = time.perf_counter()
-        reps = {m: sections.analyze(cfg, shape, mesh, m) for m in
-                ("O0", "O1", "O3")}
-        us = (time.perf_counter() - t0) * 1e6
-        for m, rep in reps.items():
-            rows.append((f"allocation/layers{L}/{m}", us / 3,
-                         f"alloc={rep.allocation:.4f}"))
-    # --- hidden-size sweep (paper Fig. 7b) ---
-    for hs in (512, 1024, 2048, 4096):
-        nq = max(4, hs // 128)
-        cfg = dataclasses.replace(base, d_model=hs, d_ff=4 * hs,
-                                  num_heads=nq, num_kv_heads=max(1, nq // 4),
-                                  head_dim=128, num_layers=12)
-        t0 = time.perf_counter()
-        rep = sections.analyze(cfg, shape, mesh, "O3")
-        us = (time.perf_counter() - t0) * 1e6
-        rows.append((f"allocation/hs{hs}/O3", us,
-                     f"alloc={rep.allocation:.4f}"))
-    # --- per assigned arch: structural allocation at train_4k ---
-    from repro.configs import SHAPES
-    for name, cfg in ARCHS.items():
-        rep = sections.analyze(cfg, SHAPES["train_4k"], mesh, "O3")
-        rows.append((f"allocation/{name}/O3", 0.0,
-                     f"alloc={rep.allocation:.4f}"))
-    return rows
+@scenario(
+    "allocation/layers", tags=("tier1", "structural", "table1", "fig6"),
+    paper_ref="Table I / Fig. 6",
+    workloads=[Workload(label=f"layers{L}", arch="granite-3-8b",
+                        shape=BENCH_SHAPE, mesh=BENCH_MESH,
+                        knobs={"num_layers": L})
+               for L in (6, 12, 24, 48)])
+def allocation_layers(wl: Workload):
+    """Allocation ratio (Eq. 2) vs layer count, all three compile modes."""
+    from repro.core import sections
+
+    cfg = dataclasses.replace(ARCHS[wl.arch],
+                              num_layers=wl.knobs["num_layers"])
+    t0 = time.perf_counter()
+    reps = {m: sections.analyze(cfg, wl.shape, wl.mesh, m)
+            for m in COMPILE_MODES}
+    us = (time.perf_counter() - t0) * 1e6
+    for m, rep in reps.items():
+        yield BenchRecord(
+            name=f"allocation/{wl.label}/{m}",
+            us_per_call=us / len(COMPILE_MODES),
+            knobs={"mode": m},
+            derived={"alloc": round(rep.allocation, 4),
+                     "n_sections": rep.n_sections})
+
+
+@scenario(
+    "allocation/hidden", tags=("tier1", "structural", "fig7"),
+    paper_ref="Fig. 7b",
+    workloads=[Workload(label=f"hs{hs}", arch="granite-3-8b",
+                        shape=BENCH_SHAPE, mesh=BENCH_MESH,
+                        knobs={"d_model": hs})
+               for hs in (512, 1024, 2048, 4096)])
+def allocation_hidden(wl: Workload):
+    """Allocation ratio vs hidden size at fixed depth, O3 partitioning."""
+    from repro.core import sections
+
+    hs = wl.knobs["d_model"]
+    nq = max(4, hs // 128)
+    cfg = dataclasses.replace(ARCHS[wl.arch], d_model=hs, d_ff=4 * hs,
+                              num_heads=nq, num_kv_heads=max(1, nq // 4),
+                              head_dim=128, num_layers=12)
+    t0 = time.perf_counter()
+    rep = sections.analyze(cfg, wl.shape, wl.mesh, "O3")
+    us = (time.perf_counter() - t0) * 1e6
+    yield BenchRecord(name=f"allocation/{wl.label}/O3", us_per_call=us,
+                      knobs={"mode": "O3"},
+                      derived={"alloc": round(rep.allocation, 4)})
+
+
+@scenario(
+    "allocation/archs", tags=("tier1", "structural", "table1"),
+    paper_ref="Table I",
+    workloads=[Workload(label=name, arch=name, shape=SHAPES["train_4k"],
+                        mesh=BENCH_MESH)
+               for name in sorted(ARCHS)])
+def allocation_archs(wl: Workload):
+    """Structural allocation at train_4k for every assigned architecture."""
+    from repro.core import sections
+
+    rep = sections.analyze(ARCHS[wl.arch], wl.shape, wl.mesh, "O3")
+    yield BenchRecord(name=f"allocation/{wl.arch}/O3",
+                      knobs={"mode": "O3"},
+                      derived={"alloc": round(rep.allocation, 4)})

@@ -7,49 +7,80 @@ dry-run roofline terms (bf16 halves the memory term), which we also emit.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+import functools
+import json
+from pathlib import Path
 
-from benchmarks.common import timeit_us
-from repro.configs import ARCHS, reduced
-from repro.models import build, Runtime
-from repro.models.frontends import synth_batch
+from repro.bench import BenchRecord, Workload, scenario, timeit_us
+
+RDIR = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+SEQ = 128
 
 
-def run():
-    rows = []
+@functools.lru_cache(maxsize=4)
+def _grad_fn(dtype_name: str):
+    """Reduced qwen2.5 block + jitted loss-grad, cached across workloads."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import ARCHS, reduced
+    from repro.models import Runtime, build
+
     cfg = reduced(ARCHS["qwen2.5-32b"], layers=4, d_model=256, d_ff=1024,
                   vocab=2048)
-
-    # --- batch sweep (Fig. 12) ---
-    model = build(cfg, Runtime(attention_backend="dense"), jnp.float32)
+    dt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[dtype_name]
+    model = build(cfg, Runtime(attention_backend="dense"), dt)
     params = model.init_params(jax.random.PRNGKey(0))
     g = jax.jit(jax.grad(lambda p, b: model.loss(p, b)[0]))
-    S = 128
-    for B in (1, 2, 4, 8, 16, 32):
-        batch = synth_batch(cfg, B, S, kind="train")
-        us = timeit_us(g, params, batch, iters=3)
-        rows.append((f"deploy/batch{B}", us,
-                     f"tok_s={B * S / (us * 1e-6):.0f}"))
+    return cfg, params, g
 
-    # --- precision sweep (Table IV) ---
-    for dt_name, dt in (("float32", jnp.float32), ("bfloat16", jnp.bfloat16)):
-        m = build(cfg, Runtime(attention_backend="dense"), dt)
-        p = m.init_params(jax.random.PRNGKey(0))
-        gg = jax.jit(jax.grad(lambda p, b: m.loss(p, b)[0]))
-        batch = synth_batch(cfg, 8, S, kind="train")
-        us = timeit_us(gg, p, batch, iters=3)
-        rows.append((f"deploy/precision_{dt_name}", us,
-                     f"tok_s={8 * S / (us * 1e-6):.0f}"))
 
-    # --- full-scale precision effect from the roofline (memory term) ---
-    import json
-    from pathlib import Path
-    rdir = Path(__file__).resolve().parents[1] / "results" / "dryrun"
-    f = rdir / "granite-3-8b_train_4k_16x16.json"
-    if f.exists():
-        rl = json.loads(f.read_text())["roofline"]
-        rows.append(("deploy/precision_fullscale_bf16", 0.0,
-                     f"memory_s={rl['memory_s']:.2f};"
-                     "f32_would_be~2x_memory_term"))
-    return rows
+@scenario(
+    "deploy/batch", tags=("measured", "fig12"),
+    paper_ref="Fig. 12",
+    workloads=[Workload(label=f"batch{B}", arch="qwen2.5-32b",
+                        knobs={"batch": B})
+               for B in (1, 2, 4, 8, 16, 32)])
+def deploy_batch(wl: Workload):
+    """Throughput vs batch size (reduced qwen2.5 block, f32 train step)."""
+    from repro.models.frontends import synth_batch
+
+    cfg, params, g = _grad_fn("float32")
+    B = wl.knobs["batch"]
+    batch = synth_batch(cfg, B, SEQ, kind="train")
+    us = timeit_us(g, params, batch, iters=3)
+    yield BenchRecord(name=f"deploy/batch{B}", us_per_call=us,
+                      derived={"tok_s": round(B * SEQ / (us * 1e-6))})
+
+
+@scenario(
+    "deploy/precision", tags=("measured", "table4"),
+    paper_ref="Table IV",
+    workloads=[Workload(label=dt, arch="qwen2.5-32b", knobs={"dtype": dt})
+               for dt in ("float32", "bfloat16")])
+def deploy_precision(wl: Workload):
+    """Throughput per param dtype at fixed batch (Table IV knob)."""
+    from repro.models.frontends import synth_batch
+
+    cfg, params, g = _grad_fn(wl.knobs["dtype"])
+    batch = synth_batch(cfg, 8, SEQ, kind="train")
+    us = timeit_us(g, params, batch, iters=3)
+    yield BenchRecord(name=f"deploy/precision_{wl.knobs['dtype']}",
+                      us_per_call=us,
+                      derived={"tok_s": round(8 * SEQ / (us * 1e-6))})
+
+
+@scenario(
+    "deploy/precision_fullscale", tags=("projected", "table4"),
+    paper_ref="Table IV (full-scale projection)",
+    workloads=[Workload(label="bf16", arch="granite-3-8b")])
+def deploy_precision_fullscale(wl: Workload):
+    """Full-scale precision effect from the dry-run roofline memory term."""
+    f = RDIR / "granite-3-8b_train_4k_16x16.json"
+    if not f.exists():
+        return
+    rl = json.loads(f.read_text())["roofline"]
+    yield BenchRecord(
+        name="deploy/precision_fullscale_bf16",
+        derived={"memory_s": round(rl["memory_s"], 2),
+                 "note": "f32_would_be~2x_memory_term"})

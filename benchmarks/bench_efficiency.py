@@ -1,44 +1,59 @@
 """Paper Fig. 9: compute performance (TFLOPs) + memory interaction vs
 model size. Measured on CPU for reduced blocks (wall-clock TFLOP/s) and
-projected at full scale from the Tier-1 roofline terms."""
+projected at full scale from the Tier-1 roofline terms in the dry-run
+artifacts."""
 from __future__ import annotations
 
-import dataclasses
-import time
+import json
+from pathlib import Path
 
-import jax
-import jax.numpy as jnp
+from repro.bench import BenchRecord, Workload, scenario, timeit_us
 
-from benchmarks.common import timeit_us
-from repro.configs import ARCHS, MeshConfig, SHAPES, reduced
-from repro.core.profiler import model_flops_for
-from repro.models import build, Runtime
-from repro.models.frontends import synth_batch
+RDIR = Path(__file__).resolve().parents[1] / "results" / "dryrun"
 
 
-def run():
-    rows = []
-    # measured: loss fwd+bwd TFLOP/s vs layer count (reduced granite)
-    for L in (2, 4, 8):
-        cfg = reduced(ARCHS["granite-3-8b"], layers=L, d_model=256,
-                      d_ff=1024, vocab=1024)
-        model = build(cfg, Runtime(attention_backend="dense"), jnp.float32)
-        params = model.init_params(jax.random.PRNGKey(0))
-        batch = synth_batch(cfg, 4, 128, kind="train")
-        g = jax.jit(jax.grad(lambda p, b: model.loss(p, b)[0]))
-        us = timeit_us(g, params, batch)
-        flops = 6.0 * cfg.param_count() * 4 * 128
-        rows.append((f"efficiency/layers{L}/measured", us,
-                     f"gflops_s={flops / (us * 1e-6) / 1e9:.2f}"))
-    # projected full-scale: roofline-step-time TFLOP/s per arch (from the
-    # dry-run artifacts when present)
-    import json
-    from pathlib import Path
-    rdir = Path(__file__).resolve().parents[1] / "results" / "dryrun"
-    for f in sorted(rdir.glob("*_train_4k_16x16.json")):
+@scenario(
+    "efficiency/measured", tags=("measured", "fig9"),
+    paper_ref="Fig. 9 (measured, reduced)",
+    workloads=[Workload(label=f"layers{L}", arch="granite-3-8b",
+                        knobs={"num_layers": L})
+               for L in (2, 4, 8)])
+def efficiency_measured(wl: Workload):
+    """Loss fwd+bwd TFLOP/s vs layer count on a reduced granite block."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import ARCHS, reduced
+    from repro.models import Runtime, build
+    from repro.models.frontends import synth_batch
+
+    L = wl.knobs["num_layers"]
+    cfg = reduced(ARCHS[wl.arch], layers=L, d_model=256, d_ff=1024,
+                  vocab=1024)
+    model = build(cfg, Runtime(attention_backend="dense"), jnp.float32)
+    params = model.init_params(jax.random.PRNGKey(0))
+    batch = synth_batch(cfg, 4, 128, kind="train")
+    g = jax.jit(jax.grad(lambda p, b: model.loss(p, b)[0]))
+    us = timeit_us(g, params, batch)
+    flops = 6.0 * cfg.param_count() * 4 * 128
+    yield BenchRecord(
+        name=f"efficiency/{wl.label}/measured", us_per_call=us,
+        derived={"gflops_s": round(flops / (us * 1e-6) / 1e9, 2)})
+
+
+@scenario(
+    "efficiency/projected", tags=("projected", "fig9"),
+    paper_ref="Fig. 9 (full-scale projection)",
+    workloads=[Workload(label="train_4k_16x16", mesh=None,
+                        knobs={"glob": "*_train_4k_16x16.json"})])
+def efficiency_projected(wl: Workload):
+    """Full-scale roofline-step-time TFLOP/s per arch from the dry-run
+    artifacts (when present)."""
+    for f in sorted(RDIR.glob(wl.knobs["glob"])):
         rec = json.loads(f.read_text())
         rl = rec["roofline"]
         tf = rl["model_flops"] / max(rl["step_time_s"], 1e-12) / 1e12
-        rows.append((f"efficiency/{rec['arch']}/projected", 0.0,
-                     f"tflops={tf:.1f};mfu={rl['mfu']:.3f}"))
-    return rows
+        yield BenchRecord(
+            name=f"efficiency/{rec['arch']}/projected",
+            arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+            derived={"tflops": round(tf, 1), "mfu": round(rl["mfu"], 3)})

@@ -1,56 +1,116 @@
 """Kernel micro-benchmarks: Pallas (interpret on CPU) vs jnp stand-ins vs
 dense reference — correctness-weighted timing plus the structural flop
-accounting the roofline uses."""
+accounting the roofline uses. Each kernel family is one scenario whose
+implementations are declared as :class:`Workload` cells."""
 from __future__ import annotations
 
-import numpy as np
+from repro.bench import BenchRecord, Workload, scenario, timeit_us
 
-import jax
-import jax.numpy as jnp
+_ATTN_IMPLS = ("dense_ref", "chunked_jnp", "pallas_interp")
+_WKV_IMPLS = ("chunked_jnp", "pallas_interp")
+_NORM_IMPLS = ("jnp", "pallas_interp")
 
-from benchmarks.common import timeit_us
-from repro.kernels import ops, ref
-from repro.models.attention import chunked_attention
-from repro.models.ssm import chunked_linear_attention
+_INTERP_NOTE = "interpret-mode (CPU); real kernel on TPU"
 
 
-def run():
-    rows = []
+def _attn_inputs():
+    import numpy as np
+    import jax.numpy as jnp
+
     rng = np.random.default_rng(0)
     B, S, Hq, Hkv, D = 1, 512, 4, 2, 64
     q = jnp.asarray(rng.standard_normal((B, S, Hq, D)), jnp.float32)
     k = jnp.asarray(rng.standard_normal((B, S, Hkv, D)), jnp.float32)
     v = jnp.asarray(rng.standard_normal((B, S, Hkv, D)), jnp.float32)
-    dense = jax.jit(lambda q, k, v: ref.flash_attention_ref(
-        q, k, v, causal=True))
-    chunked = jax.jit(lambda q, k, v: chunked_attention(
-        q, k, v, causal=True, chunk=128))
-    rows.append(("kernels/attn_dense_ref", timeit_us(dense, q, k, v), ""))
-    rows.append(("kernels/attn_chunked_jnp", timeit_us(chunked, q, k, v), ""))
-    rows.append(("kernels/attn_pallas_interp",
-                 timeit_us(lambda *a: ops.flash_attention(*a, causal=True),
-                           q, k, v, iters=2, warmup=1),
-                 "interpret-mode (CPU); real kernel on TPU"))
+    return q, k, v
 
-    T, H, K = 256, 2, 64
-    q2 = jnp.asarray(rng.standard_normal((B, T, H, K)), jnp.float32)
-    k2 = jnp.asarray(rng.standard_normal((B, T, H, K)), jnp.float32)
-    v2 = jnp.asarray(rng.standard_normal((B, T, H, K)), jnp.float32)
+
+@scenario(
+    "kernels/attention", tags=("kernel", "micro"),
+    paper_ref="kernel-level microbenchmarks",
+    workloads=[Workload(label=impl, knobs={"impl": impl})
+               for impl in _ATTN_IMPLS])
+def kernels_attention(wl: Workload):
+    """Causal flash attention: Pallas interpret vs chunked-jnp vs dense."""
+    import jax
+
+    from repro.kernels import ops, ref
+    from repro.models.attention import chunked_attention
+
+    q, k, v = _attn_inputs()
+    impl = wl.knobs["impl"]
+    if impl == "dense_ref":
+        fn = jax.jit(lambda q, k, v: ref.flash_attention_ref(
+            q, k, v, causal=True))
+        us = timeit_us(fn, q, k, v)
+        derived = {}
+    elif impl == "chunked_jnp":
+        fn = jax.jit(lambda q, k, v: chunked_attention(
+            q, k, v, causal=True, chunk=128))
+        us = timeit_us(fn, q, k, v)
+        derived = {}
+    else:
+        us = timeit_us(lambda *a: ops.flash_attention(*a, causal=True),
+                       q, k, v, iters=2, warmup=1)
+        derived = {"note": _INTERP_NOTE}
+    yield BenchRecord(name=f"kernels/attn_{impl}", us_per_call=us,
+                      derived=derived)
+
+
+@scenario(
+    "kernels/wkv6", tags=("kernel", "micro", "ssm"),
+    paper_ref="kernel-level microbenchmarks",
+    workloads=[Workload(label=impl, knobs={"impl": impl})
+               for impl in _WKV_IMPLS])
+def kernels_wkv6(wl: Workload):
+    """RWKV6 wkv recurrence: Pallas interpret vs chunked-jnp."""
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+    from repro.models.ssm import chunked_linear_attention
+
+    rng = np.random.default_rng(0)
+    B, T, H, K = 1, 256, 2, 64
+    q = jnp.asarray(rng.standard_normal((B, T, H, K)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, T, H, K)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, T, H, K)), jnp.float32)
     ld = jnp.asarray(-np.exp(rng.standard_normal((B, T, H, K))), jnp.float32)
-    chunked_w = jax.jit(lambda *a: chunked_linear_attention(*a, chunk=64)[0])
-    rows.append(("kernels/wkv6_chunked_jnp",
-                 timeit_us(chunked_w, q2, k2, v2, ld), ""))
-    rows.append(("kernels/wkv6_pallas_interp",
-                 timeit_us(lambda *a: ops.wkv6(*a, chunk=64)[0],
-                           q2, k2, v2, ld, iters=2, warmup=1),
-                 "interpret-mode (CPU)"))
+    if wl.knobs["impl"] == "chunked_jnp":
+        fn = jax.jit(lambda *a: chunked_linear_attention(*a, chunk=64)[0])
+        us = timeit_us(fn, q, k, v, ld)
+        derived = {}
+    else:
+        us = timeit_us(lambda *a: ops.wkv6(*a, chunk=64)[0],
+                       q, k, v, ld, iters=2, warmup=1)
+        derived = {"note": _INTERP_NOTE}
+    yield BenchRecord(name=f"kernels/wkv6_{wl.knobs['impl']}",
+                      us_per_call=us, derived=derived)
 
+
+@scenario(
+    "kernels/rmsnorm", tags=("kernel", "micro"),
+    paper_ref="kernel-level microbenchmarks",
+    workloads=[Workload(label=impl, knobs={"impl": impl})
+               for impl in _NORM_IMPLS])
+def kernels_rmsnorm(wl: Workload):
+    """RMSNorm: Pallas interpret vs jnp reference."""
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops, ref
+
+    rng = np.random.default_rng(0)
     x = jnp.asarray(rng.standard_normal((4096, 512)), jnp.float32)
     sc = jnp.ones((512,), jnp.float32)
-    rows.append(("kernels/rmsnorm_jnp",
-                 timeit_us(jax.jit(lambda x, s: ref.rmsnorm_ref(x, s)),
-                           x, sc), ""))
-    rows.append(("kernels/rmsnorm_pallas_interp",
-                 timeit_us(lambda x, s: ops.rmsnorm(x, s), x, sc,
-                           iters=2, warmup=1), "interpret-mode (CPU)"))
-    return rows
+    if wl.knobs["impl"] == "jnp":
+        us = timeit_us(jax.jit(lambda x, s: ref.rmsnorm_ref(x, s)), x, sc)
+        derived = {}
+    else:
+        us = timeit_us(lambda x, s: ops.rmsnorm(x, s), x, sc,
+                       iters=2, warmup=1)
+        derived = {"note": _INTERP_NOTE}
+    yield BenchRecord(name=f"kernels/rmsnorm_{wl.knobs['impl']}",
+                      us_per_call=us, derived=derived)

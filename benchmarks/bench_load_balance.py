@@ -5,46 +5,77 @@ from __future__ import annotations
 
 import dataclasses
 
-import numpy as np
+from repro.bench import (BENCH_MESH, BENCH_SHAPE, BenchRecord, Workload,
+                         scenario, timeit_us)
+from repro.configs import ARCHS, reduced
 
-import jax
-import jax.numpy as jnp
-
-from benchmarks.common import timeit_us
-from repro.configs import ARCHS, MeshConfig, ShapeConfig, reduced
-from repro.core import metrics, sections
+PARTITION_MODES = ("O1", "O3")
 
 
-def run():
-    rows = []
-    mesh = MeshConfig()
-    base = ARCHS["granite-3-8b"]
-    shape = ShapeConfig("bench", "train", 1024, 64)
-    for L in (6, 12, 24, 48):
-        cfg = dataclasses.replace(base, num_layers=L)
-        for m in ("O1", "O3"):
-            rep = sections.analyze(cfg, shape, mesh, m)
-            rows.append((f"load_balance/layers{L}/{m}", 0.0,
-                         f"LI={rep.load_imbalance:.4f}"))
-    for hs in (512, 1024, 2048, 4096):
-        nq = max(4, hs // 128)
-        cfg = dataclasses.replace(base, d_model=hs, d_ff=4 * hs,
-                                  num_heads=nq, num_kv_heads=max(1, nq // 4),
-                                  head_dim=128, num_layers=12)
-        for m in ("O1", "O3"):
-            rep = sections.analyze(cfg, shape, mesh, m)
-            rows.append((f"load_balance/hs{hs}/{m}", 0.0,
-                         f"LI={rep.load_imbalance:.4f}"))
+@scenario(
+    "load_balance/layers", tags=("tier1", "structural", "fig8"),
+    paper_ref="Fig. 8a",
+    workloads=[Workload(label=f"layers{L}", arch="granite-3-8b",
+                        shape=BENCH_SHAPE, mesh=BENCH_MESH,
+                        knobs={"num_layers": L})
+               for L in (6, 12, 24, 48)])
+def load_balance_layers(wl: Workload):
+    """LI vs layer count under O1/O3 partitioning."""
+    from repro.core import sections
 
-    # measured MoE expert-load LI on a reduced arctic block
-    cfg = reduced(ARCHS["arctic-480b"], experts=8)
+    cfg = dataclasses.replace(ARCHS[wl.arch],
+                              num_layers=wl.knobs["num_layers"])
+    for m in PARTITION_MODES:
+        rep = sections.analyze(cfg, wl.shape, wl.mesh, m)
+        yield BenchRecord(name=f"load_balance/{wl.label}/{m}",
+                          knobs={"mode": m},
+                          derived={"LI": round(rep.load_imbalance, 4)})
+
+
+@scenario(
+    "load_balance/hidden", tags=("tier1", "structural", "fig8"),
+    paper_ref="Fig. 8b",
+    workloads=[Workload(label=f"hs{hs}", arch="granite-3-8b",
+                        shape=BENCH_SHAPE, mesh=BENCH_MESH,
+                        knobs={"d_model": hs})
+               for hs in (512, 1024, 2048, 4096)])
+def load_balance_hidden(wl: Workload):
+    """LI vs hidden size at fixed depth under O1/O3 partitioning."""
+    from repro.core import sections
+
+    hs = wl.knobs["d_model"]
+    nq = max(4, hs // 128)
+    cfg = dataclasses.replace(ARCHS[wl.arch], d_model=hs, d_ff=4 * hs,
+                              num_heads=nq, num_kv_heads=max(1, nq // 4),
+                              head_dim=128, num_layers=12)
+    for m in PARTITION_MODES:
+        rep = sections.analyze(cfg, wl.shape, wl.mesh, m)
+        yield BenchRecord(name=f"load_balance/{wl.label}/{m}",
+                          knobs={"mode": m},
+                          derived={"LI": round(rep.load_imbalance, 4)})
+
+
+@scenario(
+    "load_balance/moe", tags=("tier1", "measured", "fig8", "moe"),
+    paper_ref="Fig. 8 (MoE extension)",
+    workloads=[Workload(label="experts8", arch="arctic-480b",
+                        knobs={"experts": 8})])
+def load_balance_moe(wl: Workload):
+    """Expert-load LI measured on a real routed forward of a reduced
+    arctic block."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import metrics
     from repro.models import moe as moe_mod
+
+    cfg = reduced(ARCHS[wl.arch], experts=wl.knobs["experts"])
     p = moe_mod.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
     x = jax.random.normal(jax.random.PRNGKey(1), (8, 64, cfg.d_model)) * 0.1
     fn = jax.jit(lambda p, x: moe_mod.moe_ffn(p, x, cfg)[1]["expert_load"])
     us = timeit_us(fn, p, x)
     load = np.asarray(fn(p, x))
     li = metrics.expert_load_imbalance(load)
-    rows.append(("load_balance/moe_experts/measured", us,
-                 f"LI={li:.4f}"))
-    return rows
+    yield BenchRecord(name="load_balance/moe_experts/measured",
+                      us_per_call=us, derived={"LI": round(float(li), 4)})

@@ -6,15 +6,22 @@ from __future__ import annotations
 import json
 from pathlib import Path
 
-from repro.configs import ARCHS, SHAPES
-from repro.core import metrics
+from repro.bench import BenchRecord, Workload, scenario
 
 RDIR = Path(__file__).resolve().parents[1] / "results" / "dryrun"
 
 
-def run():
-    rows = []
-    for f in sorted(RDIR.glob("*_16x16.json")):
+@scenario(
+    "roofline/dryrun", tags=("projected", "fig10"),
+    paper_ref="Fig. 10",
+    workloads=[Workload(label="16x16", knobs={"glob": "*_16x16.json"})])
+def roofline_dryrun(wl: Workload):
+    """Roofline terms + AI for every compiled dry-run cell on the mesh."""
+    from repro.configs import ARCHS, SHAPES
+    from repro.core import metrics
+
+    emitted = False
+    for f in sorted(RDIR.glob(wl.knobs["glob"])):
         rec = json.loads(f.read_text())
         rl = rec.get("roofline")
         if not rl:
@@ -29,12 +36,16 @@ def run():
             ai = metrics.arithmetic_intensity(
                 arch.active_param_count(), shape.global_batch,
                 shape.seq_len, act)
-        rows.append((
-            f"roofline/{rec['arch']}/{rec['shape']}", 0.0,
-            f"dom={rl['dominant']};c={rl['compute_s']:.3e};"
-            f"m={rl['memory_s']:.3e};n={rl['collective_s']:.3e};"
-            f"AI={ai:.1f};mfu={rl.get('mfu') or 0:.3f}"))
-    if not rows:
-        rows.append(("roofline/no_dryrun_artifacts", 0.0,
-                     "run launch/dryrun.py first"))
-    return rows
+        emitted = True
+        yield BenchRecord(
+            name=f"roofline/{rec['arch']}/{rec['shape']}",
+            arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+            derived={"dom": rl["dominant"],
+                     "compute_s": rl["compute_s"],
+                     "memory_s": rl["memory_s"],
+                     "collective_s": rl["collective_s"],
+                     "AI": round(ai, 1),
+                     "mfu": round(rl.get("mfu") or 0.0, 3)})
+    if not emitted:
+        yield BenchRecord(name="roofline/no_dryrun_artifacts",
+                          derived={"note": "run launch/dryrun.py first"})

@@ -6,22 +6,33 @@
 * PP layer-allocation sweep (IPU-style, Fig. 11c: most-loaded stage governs)
 * resident vs streaming (FSDP) weights — the paper's whole-graph vs
   weight-streaming comparison (~20% claimed overhead on WSE-2).
+
+Each axis is its own scenario so ``--only``/tag filtering and fail-soft
+error capture work per axis. The fake-device subprocess prints one JSON
+record per measurement; the parent parses JSON, never ``key=value``
+strings.
 """
 from __future__ import annotations
 
-from benchmarks.common import run_with_devices
+import json
 
-_CODE = r"""
-import time
+from repro.bench import BenchRecord, Workload, scenario, run_with_devices
+
+_PREAMBLE = r"""
+import json, time
 import numpy as np
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import ARCHS, MeshConfig, RunConfig, ShapeConfig, reduced
-from repro.launch.mesh import make_mesh
+from repro.launch.mesh import make_mesh, set_mesh
 from repro.models import build
 from repro.models.frontends import synth_batch
 from repro.parallel import sharding as shd
 from repro.runtime.steps import build_train_step, make_runtime
+
+def emit(name, t, **derived):
+    print(json.dumps({"name": name, "us_per_call": t * 1e6,
+                      "derived": derived}))
 
 def measure(fn, args, iters=4):
     out = fn(*args); jax.block_until_ready(out)
@@ -42,7 +53,7 @@ def step_time(mesh_shape, axes, exec_mode="resident"):
                      mesh=mesh_cfg, param_dtype="float32",
                      attention_backend="dense", exec_mode=exec_mode)
     mesh = make_mesh(mesh_cfg)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         step, model, opt = build_train_step(rcfg)
         params = model.init_params(jax.random.PRNGKey(0))
         pspecs = shd.param_pspecs(params, cfg, rcfg)
@@ -53,23 +64,29 @@ def step_time(mesh_shape, axes, exec_mode="resident"):
         batch = synth_batch(cfg, B, S, kind="train")
         fn = jax.jit(step)
         return measure(fn, (params, opt_state, batch))
+"""
 
-# DP scaling (Fig 11a): 1 -> 8 data shards
+_DP_CODE = _PREAMBLE + r"""
 for dp in (1, 2, 4, 8):
     t = step_time((dp, 1), ("data", "model"))
-    print(f"scalability/dp{dp},{t*1e6:.0f},tok_s={tokens/t:.0f}")
-# TP sweep (Fig 11b)
+    emit(f"scalability/dp{dp}", t, tok_s=round(tokens / t))
+"""
+
+_TP_CODE = _PREAMBLE + r"""
 for tp in (1, 2, 4, 8):
     t = step_time((8 // tp, tp), ("data", "model"))
-    print(f"scalability/tp{tp},{t*1e6:.0f},tok_s={tokens/t:.0f}")
-# resident vs streaming (weight-streaming overhead, Table III WSE column)
+    emit(f"scalability/tp{tp}", t, tok_s=round(tokens / t))
+"""
+
+_STREAMING_CODE = _PREAMBLE + r"""
 t_res = step_time((4, 2), ("data", "model"), "resident")
 t_str = step_time((4, 2), ("data", "model"), "streaming")
-print(f"scalability/resident,{t_res*1e6:.0f},tok_s={tokens/t_res:.0f}")
-print(f"scalability/streaming,{t_str*1e6:.0f},"
-      f"tok_s={tokens/t_str:.0f};overhead={t_str/t_res-1:.2%}")
+emit("scalability/resident", t_res, tok_s=round(tokens / t_res))
+emit("scalability/streaming", t_str, tok_s=round(tokens / t_str),
+     overhead=round(t_str / t_res - 1, 4))
+"""
 
-# PP layer-allocation sweep (Fig 11c) on a 4-stage pipe
+_PP_CODE = _PREAMBLE + r"""
 from repro.parallel.pipeline import stack_stages, pipeline_forward
 mesh = make_mesh(MeshConfig(shape=(4,), axes=("model",)))
 L, D, M, MB, SS = 8, 256, 8, 2, 64
@@ -79,20 +96,58 @@ x = jax.random.normal(jax.random.PRNGKey(2), (M, MB, SS, D))
 layer_fn = lambda c, p: c + jnp.tanh(c @ p["w1"]) @ p["w2"]
 for stage_layers in [(2, 2, 2, 2), (1, 2, 2, 3), (1, 1, 1, 5)]:
     staged, mask = stack_stages(params, stage_layers)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         fn = jax.jit(lambda s, m, xx: pipeline_forward(s, m, xx, layer_fn))
         t = measure(fn, (staged, mask, x))
     name = "-".join(map(str, stage_layers))
-    print(f"scalability/pp_{name},{t*1e6:.0f},"
-          f"tok_s={M*MB*SS/t:.0f};max_stage={max(stage_layers)}")
+    emit(f"scalability/pp_{name}", t, tok_s=round(M * MB * SS / t),
+         max_stage=max(stage_layers))
 """
 
 
-def run():
-    rows = []
-    out = run_with_devices(_CODE, n_devices=8, timeout=1200)
-    for line in out.strip().splitlines():
-        if line.count(",") >= 2:
-            name, us, derived = line.split(",", 2)
-            rows.append((name, float(us), derived))
-    return rows
+def _run_json(code: str, timeout: int = 1200):
+    """Run fake-device code and yield the JSON records it prints."""
+    for line in run_with_devices(code, n_devices=8,
+                                 timeout=timeout).splitlines():
+        line = line.strip()
+        if line.startswith("{"):
+            yield BenchRecord.from_dict(json.loads(line))
+
+
+@scenario(
+    "scalability/dp", tags=("measured", "fig11", "table3"),
+    paper_ref="Fig. 11a / Table III",
+    workloads=[Workload(label="dp1-8", arch="granite-3-8b",
+                        knobs={"devices": 8})])
+def scalability_dp(wl: Workload):
+    """DP replica scaling 1 -> 8 data shards (WSE-style)."""
+    yield from _run_json(_DP_CODE)
+
+
+@scenario(
+    "scalability/tp", tags=("measured", "fig11", "table3"),
+    paper_ref="Fig. 11b / Table III",
+    workloads=[Workload(label="tp1-8", arch="granite-3-8b",
+                        knobs={"devices": 8})])
+def scalability_tp(wl: Workload):
+    """TP width sweep at fixed 8 devices (RDU-style)."""
+    yield from _run_json(_TP_CODE)
+
+
+@scenario(
+    "scalability/streaming", tags=("measured", "fig11", "table3"),
+    paper_ref="Table III (weight streaming)",
+    workloads=[Workload(label="4x2", arch="granite-3-8b",
+                        knobs={"devices": 8})])
+def scalability_streaming(wl: Workload):
+    """Resident vs streaming (FSDP) weights on a 4x2 mesh."""
+    yield from _run_json(_STREAMING_CODE)
+
+
+@scenario(
+    "scalability/pp", tags=("measured", "fig11"),
+    paper_ref="Fig. 11c",
+    workloads=[Workload(label="4stage", knobs={"devices": 4})])
+def scalability_pp(wl: Workload):
+    """PP layer-allocation sweep: most-loaded stage governs throughput."""
+    yield from _run_json(_PP_CODE)

@@ -1,10 +1,9 @@
-"""Shared benchmark utilities: timing + subprocess-with-N-devices runner."""
+"""Back-compat shim: the timing loop and fake-device subprocess runner
+moved into the shared harness (:mod:`repro.bench.runner`). Import from
+``repro.bench`` in new code."""
 from __future__ import annotations
 
-import os
-import subprocess
 import sys
-import time
 from pathlib import Path
 
 REPO = Path(__file__).resolve().parents[1]
@@ -12,25 +11,4 @@ SRC = REPO / "src"
 if str(SRC) not in sys.path:
     sys.path.insert(0, str(SRC))
 
-
-def timeit_us(fn, *args, iters: int = 5, warmup: int = 2) -> float:
-    import jax
-    for _ in range(warmup):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6
-
-
-def run_with_devices(code: str, n_devices: int = 8, timeout: int = 900) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
-    env["PYTHONPATH"] = str(SRC) + os.pathsep + env.get("PYTHONPATH", "")
-    proc = subprocess.run([sys.executable, "-c", code], env=env,
-                          capture_output=True, text=True, timeout=timeout)
-    if proc.returncode != 0:
-        raise RuntimeError(f"bench subprocess failed:\n{proc.stderr[-4000:]}")
-    return proc.stdout
+from repro.bench.runner import run_with_devices, timeit_us  # noqa: E402,F401

@@ -1,61 +1,160 @@
-"""Benchmark harness — one module per paper table/figure.
+"""Benchmark harness entrypoint — every module registers scenarios with
+:mod:`repro.bench`; one shared runner times, stamps, and sinks them.
 
     PYTHONPATH=src python -m benchmarks.run [--only <substr>]
+                                            [--tags tag1,tag2]
+                                            [--json <path> | --no-json]
+                                            [--list]
 
-Prints ``name,us_per_call,derived`` CSV (one line per measurement).
+Prints the legacy ``name,us_per_call,derived`` CSV (one line per
+measurement) on stdout and writes machine-readable BenchRecord JSONL
+(default ``results/bench/latest.jsonl``). Exits non-zero if any module
+fails to import or any scenario workload raises.
 
-| module                 | paper artifact                          |
-|------------------------|-----------------------------------------|
-| bench_allocation       | Table I / Fig. 6-7 (allocation ratio)    |
-| bench_load_balance     | Fig. 8 (load imbalance, Eq. 3/4)         |
-| bench_efficiency       | Fig. 9 (TFLOPs vs model size)            |
-| bench_roofline         | Fig. 10 (roofline models)                |
-| bench_scalability      | Table III / Fig. 11 (DP/TP/PP, streaming)|
-| bench_batch_precision  | Fig. 12 / Table IV (deployment knobs)    |
-| bench_kernels          | kernel-level microbenchmarks             |
+| module                 | scenario groups   | paper artifact            |
+|------------------------|-------------------|---------------------------|
+| bench_allocation       | allocation        | Table I / Fig. 6-7        |
+| bench_load_balance     | load_balance      | Fig. 8 (LI, Eq. 3/4)      |
+| bench_efficiency       | efficiency        | Fig. 9 (TFLOPs vs size)   |
+| bench_roofline         | roofline          | Fig. 10 (roofline models) |
+| bench_scalability      | scalability       | Table III / Fig. 11       |
+| bench_batch_precision  | deploy            | Fig. 12 / Table IV        |
+| bench_kernels          | kernels           | kernel microbenchmarks    |
 """
 from __future__ import annotations
 
 import argparse
+import importlib
 import sys
 import traceback
 from pathlib import Path
 
-sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
-sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "src"))
+sys.path.insert(0, str(REPO))
 
-MODULES = [
-    "bench_allocation",
-    "bench_load_balance",
-    "bench_efficiency",
-    "bench_roofline",
-    "bench_scalability",
-    "bench_batch_precision",
-    "bench_kernels",
-]
+DEFAULT_JSONL = REPO / "results" / "bench" / "latest.jsonl"
+
+# module -> scenario groups it registers. Every module is always imported
+# (imports are cheap; heavy deps load inside scenario fns) — this map only
+# scopes which import *failures* an --only run reports and fails on, and
+# resolves module-name --only filters like `bench_kernels`.
+MODULES = {
+    "bench_allocation": ("allocation",),
+    "bench_load_balance": ("load_balance",),
+    "bench_efficiency": ("efficiency",),
+    "bench_roofline": ("roofline",),
+    "bench_scalability": ("scalability",),
+    "bench_batch_precision": ("deploy",),
+    "bench_kernels": ("kernels",),
+}
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
-    args = ap.parse_args()
-    failures = []
-    print("name,us_per_call,derived")
+def import_benchmarks():
+    """Import every bench module (side effect: scenario registration).
+    Returns (module_names_imported, import_failures); each failure is
+    (module, short_error, full_traceback) — the caller decides which
+    tracebacks to surface, so `--only` runs stay quiet about unrelated
+    breakage."""
+    imported, failures = [], []
     for mod_name in MODULES:
-        if args.only and args.only not in mod_name:
-            continue
         try:
-            mod = __import__(f"benchmarks.{mod_name}",
-                             fromlist=["run"])
-            for name, us, derived in mod.run():
-                print(f"{name},{us:.1f},{derived}", flush=True)
+            importlib.import_module(f"benchmarks.{mod_name}")
+            imported.append(mod_name)
         except Exception as e:
-            traceback.print_exc()
-            failures.append((mod_name, str(e)[:200]))
-            print(f"{mod_name}/FAILED,0,{e!r}", flush=True)
+            failures.append((mod_name, str(e)[:200],
+                             traceback.format_exc()))
+    return imported, failures
+
+
+def _module_matches(only: str, mod_name: str) -> bool:
+    """Whether an ``--only`` substring targets a module (either the module
+    file name or one of its scenario groups, in either direction — so
+    `bench_kernels`, `alloc`, and `allocation/hidden` all resolve)."""
+    return only in mod_name or \
+        any(only in g or g in only for g in MODULES[mod_name])
+
+
+def main(argv: list[str] | None = None) -> int:
+    from repro.bench import BenchRunner, CsvStdoutSink, JsonlSink, select
+
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("--only", default=None,
+                    help="substring filter on module/scenario name")
+    ap.add_argument("--tags", default=None,
+                    help="comma-separated tag filter (any-of)")
+    ap.add_argument("--json", default=str(DEFAULT_JSONL), metavar="PATH",
+                    help="BenchRecord JSONL output path "
+                         f"(default: {DEFAULT_JSONL})")
+    ap.add_argument("--no-json", action="store_true",
+                    help="skip the JSONL sink")
+    ap.add_argument("--list", action="store_true",
+                    help="list matching scenarios and exit")
+    args = ap.parse_args(argv)
+    tags = [t for t in (args.tags or "").split(",") if t] or None
+
+    imported, import_failures = import_benchmarks()
+    # a filtered run only fails on import errors in modules it targets
+    if args.only:
+        import_failures = [f for f in import_failures
+                           if _module_matches(args.only, f[0])]
+    for _, _, tb in import_failures:
+        print(tb, file=sys.stderr)
+    import_failures = [(m, e) for m, e, _ in import_failures]
+
+    # select by scenario name/group substring, falling back to the module
+    # file name (`--only bench_kernels` keeps its pre-harness meaning)
+    mod_groups = {g for m in MODULES
+                  if args.only and args.only in m for g in MODULES[m]}
+    selected = [s for s in select(tags=tags)
+                if not args.only or args.only in s.name
+                or args.only in s.group or s.group in mod_groups]
+
+    if args.list:
+        for scen in selected:
+            print(f"{scen.name:32s} tags={','.join(scen.tags):40s} "
+                  f"[{scen.paper_ref}]")
+        return 0
+
+    if not selected:
+        print("no scenarios matched", file=sys.stderr)
+        return 1
+
+    sinks = [CsvStdoutSink()]
+    if not args.no_json:
+        try:
+            jsonl = JsonlSink(args.json)
+        except OSError as e:
+            print(f"cannot write --json {args.json}: {e}", file=sys.stderr)
+            return 2
+        # filtered run into an existing result set: carry over records
+        # from scenarios outside the filter so the JSONL stays the
+        # latest-known record per scenario, not just the last invocation
+        if args.only or tags:
+            from repro.bench import read_jsonl
+
+            sel_names = {s.name for s in selected}
+            try:
+                prior = read_jsonl(args.json) \
+                    if Path(args.json).exists() else []
+            except Exception:
+                prior = []
+            for rec in prior:
+                if rec.scenario not in sel_names:
+                    jsonl.emit(rec)
+        sinks.append(jsonl)
+    summary = BenchRunner(sinks=sinks).run(selected)
+
+    for mod_name, err in import_failures:
+        print(f"{mod_name}/IMPORT_FAILED,0.0,error={err}", flush=True)
+    failures = import_failures + summary.failures
     if failures:
-        raise SystemExit(1)
+        print(f"\n{len(failures)} failure(s):", file=sys.stderr)
+        for name, err in failures:
+            print(f"  {name}: {err}", file=sys.stderr)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

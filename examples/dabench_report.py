@@ -14,7 +14,7 @@ sys.path.insert(0, str(REPO / "src"))
 
 from repro.configs import ARCHS, MeshConfig, SHAPES
 from repro.core import profile
-from repro.core.report import md_table
+from repro.core.report import bench_table, load_bench_records, md_table
 
 
 def main():
@@ -25,17 +25,18 @@ def main():
     cfg, shape = ARCHS[args.arch], SHAPES[args.shape]
     mesh = MeshConfig()
 
-    # Tier-1 structural profile (always available)
+    # Tier-1 structural profile (always available), rendered from the same
+    # BenchRecord rows the benchmark harness emits
     rep = profile(cfg, shape, mesh)
+    records = rep.to_records()
     print(f"# DABench-LLM report — {cfg.name} / {shape.name} / 16x16\n")
     print(f"params: {cfg.param_count() / 1e9:.1f}B "
           f"(active {cfg.active_param_count() / 1e9:.1f}B)   "
           f"AI (Eq.5): {rep.arithmetic_intensity:.1f} FLOPs/B\n")
-    rows = [[m, s["n_sections"], f"{s['allocation']:.3f}",
-             f"{s['load_imbalance']:.3f}", f"{s['total_runtime']:.3f}s"]
-            for m, s in rep.sections.items()]
-    print(md_table(["mode", "sections", "allocation (Eq.2)", "LI (Eq.3/4)",
-                    "roofline runtime"], rows))
+    sections = [r for r in records if r.scenario == "tier1/sections"]
+    print(bench_table(sections,
+                      columns=["n_sections", "allocation", "LI",
+                               "runtime_s"]))
 
     # Tier-1 compiled profile, if the dry-run artifact exists
     f = REPO / "results" / "dryrun" / f"{cfg.name}_{shape.name}_16x16.json"
@@ -48,6 +49,14 @@ def main():
     else:
         print("\n(run `python -m repro.launch.dryrun --arch ... --shape ...`"
               " for the compiled roofline)")
+
+    # Measured results from the last benchmark-harness run, if any
+    bench = [r for r in load_bench_records(
+                 REPO / "results" / "bench" / "latest.jsonl")
+             if not r.arch or r.arch == cfg.name]
+    if bench:
+        print(f"\nlast `benchmarks.run` records touching {cfg.name}:")
+        print(bench_table(bench[:12]))
 
     # Tier-2 deployment guidance: analytic mesh ranking (validated against
     # the measured §Perf results in tests/test_advisor.py)

@@ -1,0 +1,29 @@
+"""repro.bench — the standardized benchmark harness.
+
+Three layers:
+
+* :mod:`repro.bench.record` — :class:`BenchRecord`, the typed result every
+  benchmark emits (JSONL + legacy-CSV serializable);
+* :mod:`repro.bench.scenario` — the registry of named, tagged scenarios
+  whose (arch x shape x mesh x knobs) sweeps are declared as
+  :class:`Workload` data;
+* :mod:`repro.bench.runner` — the single runner owning timing, fail-soft
+  error capture, and result sinks.
+"""
+from repro.bench.record import (CSV_HEADER, BenchRecord, env_fingerprint,
+                                read_jsonl, write_jsonl)
+from repro.bench.runner import (BenchRunner, CsvStdoutSink, JsonlSink,
+                                ListSink, RunSummary, run_benchmarks,
+                                run_with_devices, timeit_us)
+from repro.bench.scenario import (BENCH_MESH, BENCH_SHAPE, REGISTRY,
+                                  Scenario, Workload, groups, mesh_str,
+                                  names, register, scenario, select,
+                                  unregister)
+
+__all__ = [
+    "BENCH_MESH", "BENCH_SHAPE", "BenchRecord", "BenchRunner", "CSV_HEADER",
+    "CsvStdoutSink", "JsonlSink", "ListSink", "REGISTRY", "RunSummary",
+    "Scenario", "Workload", "env_fingerprint", "groups", "mesh_str", "names",
+    "read_jsonl", "register", "run_benchmarks", "run_with_devices",
+    "scenario", "select", "timeit_us", "unregister", "write_jsonl",
+]

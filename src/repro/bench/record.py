@@ -1,0 +1,120 @@
+"""BenchRecord: the one result type every benchmark emits.
+
+A record carries the full provenance of a measurement — which registered
+scenario produced it, the (arch x shape x mesh) cell, the knob values the
+sweep varied, the measured ``us_per_call``, and *structured* derived
+metrics (a real dict, not a ``key=value`` string) — plus an environment
+fingerprint so results from different hosts/toolchains are comparable.
+
+Serialization targets:
+
+* JSONL (``to_json_line``/``from_json_line`` + ``write_jsonl``/``read_jsonl``)
+  — the machine-readable interchange the reporting layer consumes;
+* legacy CSV (``csv_line``) — the ``name,us_per_call,derived`` stdout
+  format ``python -m benchmarks.run`` has always printed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import platform
+import sys
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Dict, Iterable, List, Tuple
+
+SCHEMA_VERSION = 1
+
+
+def env_fingerprint() -> Dict[str, Any]:
+    """Best-effort description of the machine/toolchain producing records."""
+    env: Dict[str, Any] = {
+        "python": platform.python_version(),
+        "platform": sys.platform,
+        "machine": platform.machine(),
+    }
+    try:  # jax is a hard dep of the benchmarks but not of this module
+        import jax
+
+        env["jax"] = jax.__version__
+        env["backend"] = jax.default_backend()
+        env["device_count"] = jax.device_count()
+    except Exception:
+        pass
+    return env
+
+
+def _fmt(v: Any) -> str:
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+@dataclass
+class BenchRecord:
+    """One measurement from one scenario workload."""
+
+    name: str                       # full measurement id, e.g. "allocation/layers12/O3"
+    scenario: str = ""              # registered scenario id, e.g. "allocation/layers"
+    group: str = ""                 # scenario family, e.g. "allocation"
+    arch: str = ""
+    shape: str = ""
+    mesh: str = ""                  # "16x16"-style
+    knobs: Dict[str, Any] = field(default_factory=dict)
+    us_per_call: float = 0.0
+    derived: Dict[str, Any] = field(default_factory=dict)
+    tags: Tuple[str, ...] = ()
+    paper_ref: str = ""             # "Table I / Fig. 6" etc.
+    status: str = "ok"              # ok | error
+    error: str = ""
+    env: Dict[str, Any] = field(default_factory=dict)
+    version: int = SCHEMA_VERSION
+
+    # ------------------------------------------------------------- dict/json
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["tags"] = list(self.tags)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "BenchRecord":
+        known = {f.name for f in dataclasses.fields(cls)}
+        kw = {k: v for k, v in d.items() if k in known}
+        kw["tags"] = tuple(kw.get("tags", ()))
+        return cls(**kw)
+
+    def to_json_line(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @classmethod
+    def from_json_line(cls, line: str) -> "BenchRecord":
+        return cls.from_dict(json.loads(line))
+
+    # ---------------------------------------------------------- legacy CSV
+    def derived_str(self) -> str:
+        """Render derived metrics as the legacy ``k=v;k2=v2`` string."""
+        return ";".join(f"{k}={_fmt(v)}" for k, v in self.derived.items())
+
+    def csv_line(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived_str()}"
+
+
+CSV_HEADER = "name,us_per_call,derived"
+
+
+def write_jsonl(records: Iterable[BenchRecord], path: str | Path) -> Path:
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with path.open("w") as fh:
+        for rec in records:
+            fh.write(rec.to_json_line() + "\n")
+    return path
+
+
+def read_jsonl(path: str | Path) -> List[BenchRecord]:
+    out = []
+    for line in Path(path).read_text().splitlines():
+        line = line.strip()
+        if line:
+            out.append(BenchRecord.from_json_line(line))
+    return out

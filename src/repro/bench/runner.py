@@ -1,0 +1,193 @@
+"""One runner for every benchmark: timing, selection, fail-soft errors,
+and result sinks.
+
+Owns the measurement loop that used to be copy-pasted across the seven
+``benchmarks/bench_*`` modules:
+
+* :func:`timeit_us` — the warmup + iters wall-clock timer (absorbed from
+  ``benchmarks/common.py``);
+* :func:`run_with_devices` — subprocess execution with N fake host
+  devices for the inter-chip scalability scenarios;
+* :class:`BenchRunner` — iterates registered scenarios workload-by-
+  workload, stamps each yielded record with scenario provenance and the
+  environment fingerprint, captures per-workload failures as error
+  records instead of aborting the sweep, and fans records out to sinks
+  (legacy CSV on stdout, JSONL under ``results/bench/``, in-memory).
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+import traceback
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Dict, Iterable, List, Optional, Sequence, TextIO, Tuple
+
+from repro.bench.record import (CSV_HEADER, BenchRecord, env_fingerprint,
+                                write_jsonl)
+from repro.bench.scenario import REGISTRY, Scenario, Workload, mesh_str, select
+
+REPO = Path(__file__).resolve().parents[3]
+SRC = REPO / "src"
+
+
+# ------------------------------------------------------------------ timing
+def timeit_us(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Mean wall-clock microseconds per call after ``warmup`` calls."""
+    import jax
+
+    iters = max(1, iters)
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run_with_devices(code: str, n_devices: int = 8,
+                     timeout: int = 900) -> str:
+    """Run a python snippet in a subprocess with N fake host devices.
+    (The parent process must keep seeing 1 device — see launch/dryrun.py.)"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = str(SRC) + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+    if proc.returncode != 0:
+        raise RuntimeError(f"bench subprocess failed:\n{proc.stderr[-4000:]}")
+    return proc.stdout
+
+
+# ------------------------------------------------------------------- sinks
+class ListSink:
+    """Collect records in memory (``sink.records``)."""
+
+    def __init__(self) -> None:
+        self.records: List[BenchRecord] = []
+
+    def emit(self, rec: BenchRecord) -> None:
+        self.records.append(rec)
+
+    def close(self) -> None:
+        pass
+
+
+class CsvStdoutSink:
+    """The legacy ``name,us_per_call,derived`` CSV stream."""
+
+    def __init__(self, stream: Optional[TextIO] = None,
+                 header: bool = True) -> None:
+        self.stream = stream or sys.stdout
+        if header:
+            print(CSV_HEADER, file=self.stream, flush=True)
+
+    def emit(self, rec: BenchRecord) -> None:
+        print(rec.csv_line(), file=self.stream, flush=True)
+
+    def close(self) -> None:
+        pass
+
+
+class JsonlSink:
+    """Stream records to a JSONL file, atomically: lines go to a ``.tmp``
+    sibling (flushed per record, so a live run is inspectable) and replace
+    the target on close — a crashed or killed run never truncates the
+    previous result set."""
+
+    def __init__(self, path: str | Path) -> None:
+        self.path = Path(path)
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        self._tmp = self.path.with_suffix(self.path.suffix + ".tmp")
+        self._fh = self._tmp.open("w")
+
+    def emit(self, rec: BenchRecord) -> None:
+        self._fh.write(rec.to_json_line() + "\n")
+        self._fh.flush()
+
+    def close(self) -> None:
+        if self._fh.closed:
+            return
+        self._fh.close()
+        os.replace(self._tmp, self.path)
+
+
+# ------------------------------------------------------------------ runner
+@dataclass
+class RunSummary:
+    records: List[BenchRecord] = field(default_factory=list)
+    failures: List[Tuple[str, str]] = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.failures
+
+
+class BenchRunner:
+    """Execute scenarios and fan records out to sinks."""
+
+    def __init__(self, sinks: Sequence[Any] = (),
+                 env: Optional[Dict[str, Any]] = None) -> None:
+        self.sinks = list(sinks)
+        self.env = env_fingerprint() if env is None else env
+
+    # stamp scenario/workload provenance onto a record the fn yielded
+    def _finalize(self, rec: BenchRecord, scen: Scenario,
+                  wl: Workload) -> BenchRecord:
+        rec.scenario = rec.scenario or scen.name
+        rec.group = rec.group or scen.group
+        rec.tags = rec.tags or scen.tags
+        rec.paper_ref = rec.paper_ref or scen.paper_ref
+        rec.arch = rec.arch or wl.arch
+        if not rec.shape and wl.shape is not None:
+            rec.shape = wl.shape.name
+        rec.mesh = rec.mesh or mesh_str(wl.mesh)
+        merged = dict(wl.knobs)
+        merged.update(rec.knobs)
+        rec.knobs = merged
+        rec.env = rec.env or self.env
+        return rec
+
+    def _emit(self, rec: BenchRecord, out: RunSummary) -> None:
+        out.records.append(rec)
+        for sink in self.sinks:
+            sink.emit(rec)
+
+    def run(self, scenarios: Optional[Iterable[Scenario]] = None
+            ) -> RunSummary:
+        out = RunSummary()
+        scens = list(scenarios) if scenarios is not None \
+            else list(REGISTRY.values())
+        for scen in scens:
+            for wl in scen.workloads:
+                try:
+                    for rec in scen.fn(wl):
+                        self._emit(self._finalize(rec, scen, wl), out)
+                except Exception as e:  # fail-soft: record, keep sweeping
+                    traceback.print_exc(file=sys.stderr)
+                    label = f"/{wl.label}" if wl.label else ""
+                    out.failures.append(
+                        (f"{scen.name}{label}", str(e)[:200]))
+                    err = BenchRecord(
+                        name=f"{scen.name}{label}/FAILED", status="error",
+                        error="".join(traceback.format_exception_only(
+                            type(e), e)).strip()[:500],
+                        derived={"error": repr(e)[:200]})
+                    self._emit(self._finalize(err, scen, wl), out)
+        self.close()
+        return out
+
+    def close(self) -> None:
+        for sink in self.sinks:
+            sink.close()
+
+
+def run_benchmarks(only: Optional[str] = None,
+                   tags: Optional[Sequence[str]] = None,
+                   sinks: Sequence[Any] = ()) -> RunSummary:
+    """Select from the global registry and run — the one-call entrypoint
+    ``python -m benchmarks.run`` uses."""
+    return BenchRunner(sinks=sinks).run(select(only=only, tags=tags))

@@ -1,0 +1,123 @@
+"""Scenario registry: the paper's sweeps declared as data.
+
+A *scenario* is a named, taggable experiment (llm-d-benchmark's
+``<scenario, harness, workload>`` triple): a function that measures one
+workload and yields :class:`~repro.bench.record.BenchRecord` rows, plus a
+list of :class:`Workload` cells (arch x ShapeConfig x MeshConfig x knobs)
+declared as data so the Table I–IV / Fig. 6–12 sweeps are visible in one
+place instead of being loops buried inside each ``bench_*`` module.
+
+Register with the decorator::
+
+    @scenario("allocation/layers", tags=("tier1", "table1"),
+              paper_ref="Table I / Fig. 6",
+              workloads=[Workload(label=f"layers{L}", arch="granite-3-8b",
+                                  knobs={"num_layers": L})
+                         for L in (6, 12, 24, 48)])
+    def allocation_layers(wl: Workload):
+        ...
+        yield BenchRecord(name=f"allocation/{wl.label}/O3", ...)
+
+The runner (:mod:`repro.bench.runner`) owns timing, fail-soft error
+capture, and result sinks; scenario functions only measure and yield.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import (Any, Callable, Dict, Iterable, Iterator, List, Mapping,
+                    Optional, Sequence, Tuple)
+
+from repro.configs import MeshConfig, ShapeConfig
+
+from repro.bench.record import BenchRecord
+
+# Default cell for scenarios that don't sweep shape/mesh: the reduced
+# "bench" shape on the paper's 16x16 production mesh.
+BENCH_SHAPE = ShapeConfig("bench", "train", 1024, 64)
+BENCH_MESH = MeshConfig()
+
+
+def mesh_str(mesh: Optional[MeshConfig]) -> str:
+    return "x".join(map(str, mesh.shape)) if mesh is not None else ""
+
+
+@dataclass(frozen=True)
+class Workload:
+    """One cell of a sweep: what to run, not how to time it."""
+
+    label: str = ""                       # short suffix for record names
+    arch: str = ""
+    shape: Optional[ShapeConfig] = None
+    mesh: Optional[MeshConfig] = None
+    knobs: Mapping[str, Any] = field(default_factory=dict)
+
+
+ScenarioFn = Callable[[Workload], Iterable[BenchRecord]]
+
+
+@dataclass
+class Scenario:
+    name: str                             # unique id, e.g. "allocation/layers"
+    fn: ScenarioFn
+    group: str                            # family, e.g. "allocation"
+    tags: Tuple[str, ...] = ()
+    paper_ref: str = ""
+    description: str = ""
+    workloads: Tuple[Workload, ...] = (Workload(),)
+
+    def __post_init__(self) -> None:
+        if not self.workloads:
+            self.workloads = (Workload(),)
+
+
+REGISTRY: Dict[str, Scenario] = {}
+
+
+def register(scen: Scenario) -> Scenario:
+    if scen.name in REGISTRY:
+        raise ValueError(f"scenario {scen.name!r} already registered")
+    REGISTRY[scen.name] = scen
+    return scen
+
+
+def unregister(name: str) -> None:
+    REGISTRY.pop(name, None)
+
+
+def scenario(name: str, *, group: str = "", tags: Sequence[str] = (),
+             paper_ref: str = "", description: str = "",
+             workloads: Sequence[Workload] = ()) -> Callable[[ScenarioFn],
+                                                             ScenarioFn]:
+    """Decorator: register ``fn`` as a named scenario."""
+
+    def deco(fn: ScenarioFn) -> ScenarioFn:
+        register(Scenario(
+            name=name, fn=fn,
+            group=group or name.split("/", 1)[0],
+            tags=tuple(tags), paper_ref=paper_ref,
+            description=description or (fn.__doc__ or "").strip(),
+            workloads=tuple(workloads) or (Workload(),)))
+        return fn
+
+    return deco
+
+
+def names() -> List[str]:
+    return sorted(REGISTRY)
+
+
+def groups() -> List[str]:
+    return sorted({s.group for s in REGISTRY.values()})
+
+
+def select(only: Optional[str] = None,
+           tags: Optional[Sequence[str]] = None) -> Iterator[Scenario]:
+    """Scenarios matching an ``--only`` substring and/or any of ``tags``,
+    in registration order (which follows module order in benchmarks.run)."""
+    want = set(tags or ())
+    for scen in REGISTRY.values():
+        if only and only not in scen.name and only not in scen.group:
+            continue
+        if want and not want.intersection(scen.tags):
+            continue
+        yield scen

@@ -9,8 +9,9 @@ a (model x shape x mesh) cell, combining
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
+from repro.bench.record import BenchRecord
 from repro.configs.base import MeshConfig, ModelConfig, ShapeConfig
 from repro.core import metrics, sections
 from repro.core.hlo_analysis import CostReport, analyze_hlo
@@ -39,6 +40,38 @@ class Tier1Report:
             "mxu_busy_fraction": self.mxu_busy_fraction,
             **self.extras,
         }
+
+    def to_records(self) -> List[BenchRecord]:
+        """The profile as BenchRecord rows — the same interchange the
+        benchmark harness emits, so Tier-1 profiles and measured sweeps
+        flow through one reporting path."""
+        cell = f"{self.arch}/{self.shape}"
+        recs = []
+        for mode, sec in self.sections.items():
+            recs.append(BenchRecord(
+                name=f"tier1/{cell}/{mode}", scenario="tier1/sections",
+                group="tier1", arch=self.arch, shape=self.shape,
+                mesh=self.mesh, knobs={"mode": mode},
+                paper_ref="Table I / Fig. 6-8",
+                derived={"allocation": sec["allocation"],
+                         "LI": sec["load_imbalance"],
+                         "n_sections": sec["n_sections"],
+                         "runtime_s": sec["total_runtime"]}))
+        derived: Dict[str, object] = {"AI": self.arithmetic_intensity}
+        if self.roofline:
+            derived.update(
+                dom=self.roofline.get("dominant"),
+                compute_s=self.roofline.get("compute_s"),
+                memory_s=self.roofline.get("memory_s"),
+                collective_s=self.roofline.get("collective_s"),
+                mfu=self.roofline.get("mfu"))
+        if self.mxu_busy_fraction is not None:
+            derived["mxu_busy"] = self.mxu_busy_fraction
+        recs.append(BenchRecord(
+            name=f"tier1/{cell}/roofline", scenario="tier1/roofline",
+            group="tier1", arch=self.arch, shape=self.shape, mesh=self.mesh,
+            paper_ref="Fig. 10", derived=derived))
+        return recs
 
 
 def model_flops_for(cfg: ModelConfig, shape: ShapeConfig) -> float:

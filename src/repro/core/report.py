@@ -1,10 +1,15 @@
-"""Rendering helpers: turn dry-run JSON records and Tier-1/Tier-2 reports
-into the markdown tables EXPERIMENTS.md and the benchmark CSVs use."""
+"""Rendering helpers: turn BenchRecord JSONL, dry-run JSON records, and
+Tier-1/Tier-2 reports into the markdown tables EXPERIMENTS.md and the
+benchmark CSVs use. Benchmark results arrive as structured
+:class:`~repro.bench.record.BenchRecord` rows — derived metrics are read
+from the record's dict, never re-parsed from strings."""
 from __future__ import annotations
 
 import json
 from pathlib import Path
-from typing import Iterable, List, Optional
+from typing import Dict, Iterable, List, Optional
+
+from repro.bench.record import BenchRecord, read_jsonl
 
 
 def md_table(headers: List[str], rows: Iterable[Iterable]) -> str:
@@ -34,6 +39,65 @@ def load_dryrun_records(results_dir: Path, mesh: str = "16x16") -> list:
     for f in sorted(results_dir.glob(f"*_{mesh}.json")):
         recs.append(json.loads(f.read_text()))
     return recs
+
+
+# ----------------------------------------------------- BenchRecord tables
+def load_bench_records(path: str | Path) -> List[BenchRecord]:
+    """Load harness results (``results/bench/*.jsonl``); [] if absent."""
+    path = Path(path)
+    return read_jsonl(path) if path.exists() else []
+
+
+def group_records(recs: Iterable[BenchRecord]
+                  ) -> Dict[str, List[BenchRecord]]:
+    """Bucket records by scenario family, preserving record order."""
+    out: Dict[str, List[BenchRecord]] = {}
+    for r in recs:
+        out.setdefault(r.group or r.name.split("/", 1)[0], []).append(r)
+    return out
+
+
+def derived_keys(recs: Iterable[BenchRecord]) -> List[str]:
+    """Union of derived-metric names, in first-seen order."""
+    keys: List[str] = []
+    for r in recs:
+        for k in r.derived:
+            if k not in keys:
+                keys.append(k)
+    return keys
+
+
+def _fmt_cell(v) -> str:
+    if v is None:
+        return "-"
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def bench_table(recs: List[BenchRecord],
+                columns: Optional[List[str]] = None) -> str:
+    """Markdown table straight from BenchRecords: one row per record,
+    one column per derived metric (``columns`` narrows/orders them)."""
+    cols = columns if columns is not None else derived_keys(recs)
+    headers = ["name", "us/call"] + cols
+    rows = []
+    for r in recs:
+        row = [r.name if r.status == "ok" else f"{r.name} (!)",
+               f"{r.us_per_call:.1f}" if r.us_per_call else "-"]
+        row += [_fmt_cell(r.derived.get(k)) for k in cols]
+        rows.append(row)
+    return md_table(headers, rows)
+
+
+def bench_summary(recs: List[BenchRecord]) -> str:
+    """One markdown section per scenario group."""
+    parts = []
+    for group, rows in group_records(recs).items():
+        ref = next((r.paper_ref for r in rows if r.paper_ref), "")
+        title = f"### {group}" + (f" — {ref}" if ref else "")
+        parts.append(f"{title}\n\n{bench_table(rows)}")
+    return "\n\n".join(parts)
 
 
 def roofline_table(recs: list) -> str:

@@ -21,6 +21,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax < 0.5 ships this as TPUCompilerParams; newer releases renamed it
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
 NEG_INF = -1e30
 
 
@@ -123,7 +127,7 @@ def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
         pltpu.VMEM((bq, 1), jnp.float32),
         pltpu.VMEM((bq, D), jnp.float32),
     ]
-    params = pltpu.CompilerParams(
+    params = _CompilerParams(
         dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"))
     o_spec = pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0))
     if not return_lse:
@@ -259,7 +263,7 @@ def flash_attention_bwd(q, k, v, o, lse, do, *, causal: bool = True,
     delta = jnp.sum(dot_.astype(jnp.float32) * ot.astype(jnp.float32),
                     axis=-1)                                   # (B,Hq,Sq)
     kw = dict(scale=scale, causal=causal, window=window, bq=bq, bk=bk)
-    params = pltpu.CompilerParams(
+    params = _CompilerParams(
         dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"))
     row_spec = pl.BlockSpec((1, 1, bq), lambda b, h, i, j: (b, h, i))
     dq = pl.pallas_call(

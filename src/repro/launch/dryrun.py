@@ -19,7 +19,7 @@ from repro.core.hlo_analysis import analyze_hlo        # noqa: E402
 from repro.core.roofline import (                      # noqa: E402
     model_flops_decode, model_flops_prefill, model_flops_train, roofline)
 from repro.launch.cells import all_cells, cell_run_config  # noqa: E402
-from repro.launch.mesh import make_production_mesh     # noqa: E402
+from repro.launch.mesh import make_production_mesh, set_mesh  # noqa: E402
 from repro.models.frontends import (                   # noqa: E402
     prefill_batch_spec, train_batch_spec)
 from repro.optim.adamw import AdamWState               # noqa: E402
@@ -149,7 +149,7 @@ def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
         "multi_pod": multi_pod,
     }
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         args, in_sh, out_sh, donate, step = input_specs(rcfg, mesh)
         lowered = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
                           donate_argnums=donate).lower(*args)

@@ -2,6 +2,13 @@
 
 A function, not a module-level constant, so importing this module never
 touches jax device state (jax locks the device count on first init).
+
+Also the jax-version compat seam: newer jax spells the ambient-mesh
+context ``jax.set_mesh`` and takes ``axis_types`` in ``jax.make_mesh``;
+older releases (<= 0.4.x) have neither, but ``Mesh`` itself is a context
+manager with the same ambient-mesh effect. Callers use :func:`set_mesh`
+and :func:`make_mesh` from this module and never touch ``jax.set_mesh``
+directly.
 """
 from __future__ import annotations
 
@@ -10,12 +17,27 @@ import jax
 from repro.configs.base import MeshConfig
 
 
+def _mk(shape, axes):
+    try:
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    except (AttributeError, TypeError):  # jax < 0.5: no axis_types
+        return jax.make_mesh(shape, axes)
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh  # jax < 0.5: Mesh is its own context manager
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mk(shape, axes)
 
 
 def mesh_config(*, multi_pod: bool = False) -> MeshConfig:
@@ -26,6 +48,4 @@ def mesh_config(*, multi_pod: bool = False) -> MeshConfig:
 
 def make_mesh(mesh_cfg: MeshConfig):
     """Build a jax Mesh for an arbitrary MeshConfig (tests use small ones)."""
-    return jax.make_mesh(
-        mesh_cfg.shape, mesh_cfg.axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(mesh_cfg.axes))
+    return _mk(mesh_cfg.shape, mesh_cfg.axes)

@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import RunConfig, ShapeConfig, get_arch, reduced
-from repro.launch.mesh import make_mesh
+from repro.launch.mesh import make_mesh, set_mesh
 from repro.models.frontends import synth_batch
 from repro.runtime.elastic import choose_mesh
 from repro.runtime.serve_loop import generate
@@ -34,7 +34,7 @@ def main(argv=None):
                      attention_backend="dense", param_dtype="float32",
                      decode_attention="simple")
     mesh = make_mesh(mesh_cfg)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         prefill_fn, model = build_prefill_step(rcfg)
         decode_fn, dmodel = build_decode_step(rcfg)
         params = model.init_params(jax.random.PRNGKey(0))

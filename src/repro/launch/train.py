@@ -15,7 +15,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import RunConfig, SHAPES, ShapeConfig, get_arch, reduced
 from repro.data.pipeline import SyntheticLM
-from repro.launch.mesh import make_mesh
+from repro.launch.mesh import make_mesh, set_mesh
 from repro.parallel import sharding as shd
 from repro.runtime import train_loop
 from repro.runtime.steps import build_train_step
@@ -53,7 +53,7 @@ def main(argv=None):
     mesh = make_mesh(mesh_cfg)
     data = SyntheticLM(cfg, args.batch, args.seq)
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         step_fn, model, opt = build_train_step(rcfg, total_steps=args.steps)
         params = model.init_params(jax.random.PRNGKey(rcfg.seed))
         pspecs = shd.param_pspecs(params, cfg, rcfg)

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, MoEConfig
+from repro.parallel.compat import axis_size, shard_map
 
 
 def moe_init(key, cfg: ModelConfig, dtype) -> dict:
@@ -82,7 +83,7 @@ def moe_ffn_shardmap(p, x, cfg: ModelConfig, rt):
         # combined expert-shard index over the (possibly multi-axis) EP axes
         j = jnp.int32(0)
         for a in ep_axes:
-            j = j * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+            j = j * axis_size(a) + jax.lax.axis_index(a)
         lo = j * E_loc
         if dp:  # ZeRO-3: stream the full expert weights for this model shard
             w_in = jax.lax.all_gather(w_in, dp, axis=1, tiled=True)
@@ -120,7 +121,7 @@ def moe_ffn_shardmap(p, x, cfg: ModelConfig, rt):
 
     dps = dp if dp else None
     eps = ep_axes if len(ep_axes) > 1 else ep_axes[0]
-    y, load = jax.shard_map(
+    y, load = shard_map(
         local_fn,
         in_specs=(P(dps, None), P(dps, None), P(dps, None),
                   P(eps, dps, None), P(eps, dps, None),

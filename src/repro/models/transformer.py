@@ -13,6 +13,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec
 
 from repro.configs.base import ModelConfig
+from repro.parallel.compat import shard_map
 from repro.models import attention as attn_mod
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
@@ -71,7 +72,7 @@ def _norm(p_n, x, cfg: ModelConfig, rt: Runtime):
         return apply_norm(p_n, x, cfg.norm)
     from jax.sharding import PartitionSpec as P
     pspecs = jax.tree.map(lambda _: P(None), p_n)
-    return jax.shard_map(
+    return shard_map(
         lambda pn, xx: apply_norm(pn, xx, cfg.norm),
         in_specs=(pspecs, rt.act_spec), out_specs=rt.act_spec,
         check_vma=False)(p_n, x)

@@ -22,9 +22,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.parallel.compat import axis_size, shard_map
+
 
 def _shard_map(fn, in_specs, out_specs):
-    return jax.shard_map(fn, in_specs=in_specs, out_specs=out_specs,
+    return shard_map(fn, in_specs=in_specs, out_specs=out_specs,
                          check_vma=False)
 
 
@@ -40,7 +42,7 @@ def partitioned_decode_attention(q, k_cache, v_cache, cache_len,
     bspec = batch_axes if batch_axes else None
 
     def local(q, k, v, cache_len):
-        nshard = jax.lax.axis_size(seq_axis)
+        nshard = axis_size(seq_axis)
         idx = jax.lax.axis_index(seq_axis)
         s_loc = k.shape[1]
         qg = q.reshape(-1, Hkv, g, D)

@@ -1,0 +1,44 @@
+"""jax-version compat for shard_map.
+
+Newer jax exposes ``jax.shard_map(fn, in_specs=..., out_specs=...,
+check_vma=...)`` and resolves the mesh from the ambient context; older
+releases (<= 0.4.x) ship it as ``jax.experimental.shard_map.shard_map``
+with a required positional mesh and the replication check spelled
+``check_rep``. Call sites import :func:`shard_map` from here and keep the
+new-style keyword signature.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _ambient_mesh():
+    from jax._src.mesh import thread_resources
+
+    mesh = thread_resources.env.physical_mesh
+    if mesh.empty:
+        raise RuntimeError(
+            "shard_map outside a mesh context: wrap the call in "
+            "`with set_mesh(mesh):` (repro.launch.mesh)")
+    return mesh
+
+
+def axis_size(axis_name):
+    """Size of a mapped mesh axis inside shard_map.
+
+    ``jax.lax.axis_size`` is a newer spelling; ``psum(1, axis)`` is the
+    classic one and constant-folds to a static int.
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def shard_map(fn, *, in_specs, out_specs, check_vma: bool = True):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, in_specs=in_specs, out_specs=out_specs,
+                             check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(fn, _ambient_mesh(), in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_vma)

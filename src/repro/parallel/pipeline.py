@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.parallel.compat import axis_size, shard_map
+
 
 def stage_layout(num_layers: int, stage_layers: Sequence[int]):
     """Map layer index -> (stage, slot) with per-stage padding to max."""
@@ -68,7 +70,7 @@ def pipeline_forward(staged_params, valid_mask, mbs, layer_fn,
         params_l = jax.tree.map(lambda x: x[0], params_l)
         mask_l = mask_l[0]
         s = jax.lax.axis_index(axis)
-        S = jax.lax.axis_size(axis)
+        S = axis_size(axis)
 
         def run_stage(x):
             def body(c, xs):
@@ -104,7 +106,7 @@ def pipeline_forward(staged_params, valid_mask, mbs, layer_fn,
         # out_specs can be replicated over the pipe axis.
         return jax.lax.psum(outs, axis)
 
-    return jax.shard_map(
+    return shard_map(
         local,
         in_specs=(P(None), jax.tree.map(lambda _: P(axis), staged_params),
                   P(axis)),

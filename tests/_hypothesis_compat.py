@@ -1,0 +1,100 @@
+"""Use hypothesis when installed; otherwise a tiny deterministic fallback.
+
+The tier-1 suite must collect and run on a clean environment where
+``hypothesis`` isn't installed. Property tests import ``given``,
+``settings``, and ``st`` from this module instead of from hypothesis:
+with hypothesis present they get the real thing; without it they get a
+deterministic sampler that draws a fixed number of pseudo-random examples
+per test (seeded, so failures reproduce).
+
+Only the strategy combinators the suite actually uses are implemented:
+``sampled_from``, ``booleans``, ``floats``, ``integers``, ``lists``,
+``tuples``.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import random
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def sampled_from(options):
+            options = list(options)
+            return _Strategy(lambda rng: rng.choice(options))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return [elements.example(rng) for _ in range(n)]
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*elements):
+            return _Strategy(
+                lambda rng: tuple(e.example(rng) for e in elements))
+
+    st = _Strategies()
+
+    class settings:  # noqa: N801 — mirrors hypothesis.settings
+        _profiles = {}
+        max_examples = 20
+
+        def __init__(self, **kwargs):
+            pass
+
+        @classmethod
+        def register_profile(cls, name, **kwargs):
+            cls._profiles[name] = kwargs
+
+        @classmethod
+        def load_profile(cls, name):
+            cls.max_examples = cls._profiles.get(name, {}).get(
+                "max_examples", cls.max_examples)
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                rng = random.Random(0)
+                for _ in range(settings.max_examples):
+                    drawn_args = tuple(s.example(rng)
+                                       for s in arg_strategies)
+                    drawn_kw = {k: s.example(rng)
+                                for k, s in kw_strategies.items()}
+                    fn(*args, *drawn_args, **kwargs, **drawn_kw)
+
+            # pytest must not see the wrapped signature, or it would try
+            # to inject the strategy parameters as fixtures
+            del wrapper.__wrapped__
+            return wrapper
+
+        return deco

@@ -1,0 +1,166 @@
+"""repro.bench subsystem: BenchRecord round-trips, scenario registry
+registration/filtering, and an end-to-end runner smoke test (tiny
+scenarios, no jax required)."""
+from __future__ import annotations
+
+import json
+
+import pytest
+
+from repro.bench import (BenchRecord, BenchRunner, CSV_HEADER, CsvStdoutSink,
+                         JsonlSink, ListSink, Scenario, Workload,
+                         read_jsonl, register, scenario, select, unregister,
+                         write_jsonl)
+from repro.bench.scenario import REGISTRY
+
+
+# ------------------------------------------------------------- record I/O
+def test_record_json_round_trip():
+    rec = BenchRecord(
+        name="allocation/layers12/O3", scenario="allocation/layers",
+        group="allocation", arch="granite-3-8b", shape="bench",
+        mesh="16x16", knobs={"mode": "O3", "num_layers": 12},
+        us_per_call=123.4, derived={"alloc": 0.998, "n_sections": 13},
+        tags=("tier1", "table1"), paper_ref="Table I",
+        env={"python": "3.10"})
+    back = BenchRecord.from_json_line(rec.to_json_line())
+    assert back == rec
+    # derived metrics survive as a real dict, not a parsed string
+    assert back.derived["alloc"] == pytest.approx(0.998)
+    assert isinstance(back.derived["n_sections"], int)
+
+
+def test_record_from_dict_ignores_unknown_fields():
+    d = json.loads(BenchRecord(name="x").to_json_line())
+    d["future_field"] = "whatever"
+    assert BenchRecord.from_dict(d).name == "x"
+
+
+def test_record_csv_line_matches_legacy_format():
+    rec = BenchRecord(name="deploy/batch8", us_per_call=1234.56,
+                      derived={"tok_s": 829, "mfu": 0.51234})
+    assert CSV_HEADER == "name,us_per_call,derived"
+    assert rec.csv_line() == "deploy/batch8,1234.6,tok_s=829;mfu=0.5123"
+
+
+def test_jsonl_file_round_trip(tmp_path):
+    recs = [BenchRecord(name=f"g/s{i}", us_per_call=float(i),
+                        derived={"m": i}) for i in range(3)]
+    path = write_jsonl(recs, tmp_path / "out" / "r.jsonl")
+    assert read_jsonl(path) == recs
+
+
+# --------------------------------------------------------------- registry
+@pytest.fixture
+def scratch_registry():
+    """Track scenario names registered inside a test; always unregister."""
+    added = []
+    yield added
+    for name in added:
+        unregister(name)
+
+
+def test_scenario_decorator_registers(scratch_registry):
+    @scenario("_test/basic", tags=("unit",), paper_ref="Fig. 0",
+              workloads=[Workload(label="a"), Workload(label="b")])
+    def fn(wl):
+        yield BenchRecord(name=f"_test/{wl.label}")
+
+    scratch_registry.append("_test/basic")
+    scen = REGISTRY["_test/basic"]
+    assert scen.group == "_test"
+    assert scen.tags == ("unit",)
+    assert len(scen.workloads) == 2
+
+
+def test_duplicate_registration_rejected(scratch_registry):
+    register(Scenario(name="_test/dup", fn=lambda wl: [], group="_test"))
+    scratch_registry.append("_test/dup")
+    with pytest.raises(ValueError, match="already registered"):
+        register(Scenario(name="_test/dup", fn=lambda wl: [],
+                          group="_test"))
+
+
+def test_select_filters_by_substring_and_tags(scratch_registry):
+    for name, tags in [("_test/aaa", ("red",)), ("_test/bbb", ("blue",))]:
+        register(Scenario(name=name, fn=lambda wl: [], group="_test",
+                          tags=tags))
+        scratch_registry.append(name)
+    assert [s.name for s in select(only="_test/a")] == ["_test/aaa"]
+    assert [s.name for s in select(only="_test", tags=["blue"])] \
+        == ["_test/bbb"]
+    assert [s.name for s in select(only="_test/nope")] == []
+
+
+# ----------------------------------------------------------------- runner
+def _tiny_scenarios():
+    ok = Scenario(
+        name="_test/ok",
+        fn=lambda wl: [BenchRecord(name=f"_test/ok/{wl.label}",
+                                   us_per_call=1.0,
+                                   derived={"x": wl.knobs["x"]})],
+        group="_test", tags=("unit",), paper_ref="Fig. 0",
+        workloads=(Workload(label="w0", arch="granite-3-8b",
+                            knobs={"x": 7}),))
+
+    def boom(wl):
+        raise RuntimeError("kaboom")
+        yield  # pragma: no cover
+
+    bad = Scenario(name="_test/boom", fn=boom, group="_test",
+                   workloads=(Workload(label="w0"),))
+    return ok, bad
+
+
+def test_runner_end_to_end_with_sinks(tmp_path, capsys):
+    ok, bad = _tiny_scenarios()
+    jsonl = tmp_path / "r.jsonl"
+    sink = ListSink()
+    summary = BenchRunner(
+        sinks=[CsvStdoutSink(), JsonlSink(jsonl), sink]).run([ok, bad])
+
+    # fail-soft: the bad scenario is captured, the sweep completes
+    assert [n for n, _ in summary.failures] == ["_test/boom/w0"]
+    assert not summary.ok
+
+    good = [r for r in summary.records if r.status == "ok"]
+    errs = [r for r in summary.records if r.status == "error"]
+    assert len(good) == 1 and len(errs) == 1
+    # provenance stamped from scenario + workload
+    rec = good[0]
+    assert rec.scenario == "_test/ok" and rec.group == "_test"
+    assert rec.arch == "granite-3-8b" and rec.tags == ("unit",)
+    assert rec.knobs == {"x": 7} and rec.env
+    assert "kaboom" in errs[0].error
+
+    # every sink saw every record
+    assert sink.records == summary.records
+    assert read_jsonl(jsonl) == summary.records
+    out = capsys.readouterr().out.splitlines()
+    assert out[0] == CSV_HEADER
+    assert out[1] == "_test/ok/w0,1.0,x=7"
+
+
+def test_runner_record_knobs_override_workload_knobs():
+    scen = Scenario(
+        name="_test/knobs",
+        fn=lambda wl: [BenchRecord(name="_test/knobs/r",
+                                   knobs={"mode": "O3"})],
+        group="_test", workloads=(Workload(knobs={"mode": "O0", "L": 4}),))
+    summary = BenchRunner().run([scen])
+    assert summary.records[0].knobs == {"mode": "O3", "L": 4}
+
+
+# ------------------------------------------------- harness CLI glue
+def test_run_module_registers_all_benchmark_groups():
+    """benchmarks.run imports every module and each registers its group."""
+    import benchmarks.run as bench_run
+
+    imported, failures = bench_run.import_benchmarks()
+    assert not failures, failures
+    from repro.bench import groups
+
+    got = set(groups())
+    for groups_for_mod in bench_run.MODULES.values():
+        for g in groups_for_mod:
+            assert g in got, f"group {g} never registered"

@@ -1,8 +1,9 @@
 """Pallas kernel validation: interpret-mode execution vs pure-jnp oracles,
-with hypothesis sweeps over shapes/dtypes."""
+with hypothesis sweeps over shapes/dtypes (deterministic fallback sampler
+when hypothesis isn't installed — see tests/_hypothesis_compat.py)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 import jax
 import jax.numpy as jnp

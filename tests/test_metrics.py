@@ -3,7 +3,7 @@ HLO-analyzer verification against hand-built modules, section partitioner
 invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs import ARCHS, SHAPES, MeshConfig
 from repro.core import metrics, sections

@@ -12,7 +12,7 @@ from repro.configs import ARCHS, reduced, RunConfig, ShapeConfig, MeshConfig
 from repro.models import build, Runtime
 from repro.models.frontends import synth_batch
 from repro.parallel import sharding as shd
-from repro.launch.mesh import make_mesh
+from repro.launch.mesh import make_mesh, set_mesh
 
 cfg = reduced(ARCHS["granite-3-8b"], d_model=128, vocab=512)
 batch = synth_batch(cfg, 4, 32, kind="train")
@@ -29,7 +29,7 @@ from repro.runtime.steps import make_runtime
 rt = make_runtime(rcfg)
 model2 = build(cfg, rt, jnp.float32)
 pspecs = shd.param_pspecs(params, cfg, rcfg)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     sharded = jax.tree.map(lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
                            params, pspecs,
                            is_leaf=lambda x: not isinstance(x, dict))
@@ -48,7 +48,7 @@ import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.parallel.collectives import partitioned_decode_attention
 from repro.models.attention import decode_attention_simple
-from repro.launch.mesh import make_mesh
+from repro.launch.mesh import make_mesh, set_mesh
 from repro.configs import MeshConfig
 
 mesh = make_mesh(MeshConfig(shape=(2, 4), axes=("data", "model")))
@@ -59,7 +59,7 @@ k = jnp.asarray(rng.standard_normal((B, S, Hkv, D)), jnp.float32)
 v = jnp.asarray(rng.standard_normal((B, S, Hkv, D)), jnp.float32)
 for cache_len in (S, 37, 5):
     want = decode_attention_simple(q, k, v, jnp.int32(cache_len))
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         got = jax.jit(lambda q, k, v, n: partitioned_decode_attention(
             q, k, v, n, batch_axes=("data",)))(q, k, v, jnp.int32(cache_len))
     err = float(jnp.abs(got - want).max())
@@ -77,7 +77,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs import ARCHS, reduced
 from repro.models import moe as moe_mod
 from repro.models.transformer import Runtime
-from repro.launch.mesh import make_mesh
+from repro.launch.mesh import make_mesh, set_mesh
 from repro.configs import MeshConfig
 
 cfg = reduced(ARCHS["arctic-480b"], experts=8)
@@ -88,7 +88,7 @@ p = moe_mod.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
 x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, cfg.d_model)) * 0.1
 rt = Runtime(act_spec=P("data", None, None), mesh_batch_axes=("data",),
              dp_size=4, moe_shardmap=True)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     y_sm, aux = jax.jit(lambda p, x: moe_mod.moe_ffn(p, x, cfg, rt))(p, x)
 y_ref, aux_ref = jax.jit(lambda p, x: moe_mod._moe_ffn_dense(p, x, cfg, None))(p, x)
 err = float(jnp.abs(y_sm - y_ref).max()) / float(jnp.abs(y_ref).max())
@@ -102,7 +102,7 @@ def test_pipeline_matches_sequential():
     run_with_devices("""
 import jax, jax.numpy as jnp
 from repro.parallel.pipeline import stack_stages, pipeline_forward
-from repro.launch.mesh import make_mesh
+from repro.launch.mesh import make_mesh, set_mesh
 from repro.configs import MeshConfig
 
 mesh = make_mesh(MeshConfig(shape=(4,), axes=("model",)))
@@ -117,7 +117,7 @@ def seq(xx):
 ref = jax.vmap(seq)(x)
 for stage_layers in [(2, 2, 2, 2), (1, 3, 2, 2), (5, 1, 1, 1)]:
     staged, mask = stack_stages(params, stage_layers)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         out = jax.jit(lambda s, m, xx: pipeline_forward(
             s, m, xx, layer_fn))(staged, mask, x)
     err = float(jnp.abs(out - ref).max())
@@ -134,13 +134,13 @@ def test_compressed_gradient_allreduce():
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.parallel.collectives import compressed_psum_grads
-from repro.launch.mesh import make_mesh
+from repro.launch.mesh import make_mesh, set_mesh
 from repro.configs import MeshConfig
 
 mesh = make_mesh(MeshConfig(shape=(8,), axes=("data",)))
 g = {"w": jax.random.normal(jax.random.PRNGKey(0), (1000,)) * 0.01}
 res = {"w": jnp.zeros(1000)}
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     out, new_res = jax.jit(lambda g, r: compressed_psum_grads(
         g, r, data_axes=("data",)))(g, res)
 exact = g["w"] * 8  # replicated input summed over 8 shards
@@ -159,7 +159,7 @@ import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import MeshConfig
 from repro.parallel import sharding as shd
-from repro.launch.mesh import make_mesh
+from repro.launch.mesh import make_mesh, set_mesh
 
 mesh_cfg = MeshConfig(shape=(2, 2, 2), axes=("pod", "data", "model"))
 mesh = make_mesh(mesh_cfg)

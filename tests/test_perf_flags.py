@@ -11,7 +11,7 @@ import dataclasses
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding
 from repro.configs import ARCHS, MeshConfig, RunConfig, ShapeConfig, reduced
-from repro.launch.mesh import make_mesh
+from repro.launch.mesh import make_mesh, set_mesh
 from repro.models.frontends import synth_batch
 from repro.parallel import sharding as shd
 from repro.runtime.steps import build_train_step
@@ -22,7 +22,7 @@ def loss_with(arch, flags, mesh_cfg):
                      mesh=mesh_cfg, param_dtype="float32",
                      attention_backend="dense", microbatches=2, **flags)
     mesh = make_mesh(mesh_cfg)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         step, model, opt = build_train_step(rcfg)
         params = model.init_params(jax.random.PRNGKey(0))
         pspecs = shd.param_pspecs(params, cfg, rcfg)

@@ -96,7 +96,7 @@ import dataclasses
 import jax
 from repro.configs import RunConfig, SHAPES, MeshConfig, get_arch, reduced
 from repro.launch.dryrun import input_specs, _cpu_f32_duplicates
-from repro.launch.mesh import make_mesh
+from repro.launch.mesh import make_mesh, set_mesh
 from repro.core.hlo_analysis import analyze_hlo
 
 arch = reduced(get_arch("granite-3-8b"), d_model=256, vocab=512, layers=4)
@@ -104,7 +104,7 @@ mesh_cfg = MeshConfig(shape=(4, 2), axes=("data", "model"))
 shape = dataclasses.replace(SHAPES["train_4k"], seq_len=128, global_batch=8)
 rcfg = RunConfig(model=arch, shape=shape, mesh=mesh_cfg, microbatches=4)
 mesh = make_mesh(mesh_cfg)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     args, in_sh, out_sh, donate, step = input_specs(rcfg, mesh)
     compiled = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
                        donate_argnums=donate).lower(*args).compile()

@@ -1,4 +1,5 @@
-"""Regenerate EXPERIMENTS.md from dry-run artifacts + the perf log.
+"""Regenerate EXPERIMENTS.md from dry-run artifacts, the benchmark-harness
+JSONL (``results/bench/latest.jsonl``), and the perf log.
 
     PYTHONPATH=src python tools/render_experiments.py
 """
@@ -11,9 +12,11 @@ from pathlib import Path
 REPO = Path(__file__).resolve().parents[1]
 sys.path.insert(0, str(REPO / "src"))
 
-from repro.core.report import fmt_gb, fmt_s, md_table  # noqa: E402
+from repro.core.report import (bench_summary, fmt_gb, fmt_s,  # noqa: E402
+                               load_bench_records, md_table)
 
 RDIR = REPO / "results" / "dryrun"
+BENCH_JSONL = REPO / "results" / "bench" / "latest.jsonl"
 
 
 def load(mesh: str):
@@ -106,6 +109,11 @@ def main():
                  "tests/test_parallel.py::test_multi_pod_axis_shards).\n")
     parts.append("\n## §Roofline — single pod, per (arch x shape)\n")
     parts.append(roofline_table(single))
+    bench = load_bench_records(BENCH_JSONL)
+    if bench:
+        parts.append("\n\n## §Benchmark harness — "
+                     f"`python -m benchmarks.run` ({len(bench)} records)\n")
+        parts.append(bench_summary(bench))
     findings = REPO / "results" / "findings.md"
     if findings.exists():
         parts.append("\n\n" + findings.read_text())
