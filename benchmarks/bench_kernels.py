@@ -1,7 +1,11 @@
 """Kernel micro-benchmarks: Pallas (interpret on CPU) vs jnp stand-ins vs
 dense reference — correctness-weighted timing plus the structural flop
 accounting the roofline uses. Each kernel family is one scenario whose
-implementations are declared as :class:`Workload` cells."""
+implementations are declared as :class:`Workload` cells.
+
+Pallas workloads run with "auto" tile sizes: the resolved config (tuned
+cache hit from ``--tune``, or the kernel default) is reported in the
+record's derived metrics."""
 from __future__ import annotations
 
 from repro.bench import BenchRecord, Workload, scenario, timeit_us
@@ -50,9 +54,18 @@ def kernels_attention(wl: Workload):
         us = timeit_us(fn, q, k, v)
         derived = {}
     else:
+        from repro.kernels import tuning
+
         us = timeit_us(lambda *a: ops.flash_attention(*a, causal=True),
                        q, k, v, iters=2, warmup=1)
-        derived = {"note": _INTERP_NOTE}
+        sig = tuning.attention_signature(q.shape, k.shape, q.dtype,
+                                         causal=True, window=0)
+        bq, bk = tuning.resolve_attention_blocks(
+            None, None, q_shape=q.shape, k_shape=k.shape, dtype=q.dtype,
+            causal=True, window=0)
+        derived = {"note": _INTERP_NOTE, "block_q": bq, "block_k": bk,
+                   "tuned": bool(tuning.lookup("flash_attention_fwd",
+                                               sig))}
     yield BenchRecord(name=f"kernels/attn_{impl}", us_per_call=us,
                       derived=derived)
 
@@ -82,9 +95,17 @@ def kernels_wkv6(wl: Workload):
         us = timeit_us(fn, q, k, v, ld)
         derived = {}
     else:
-        us = timeit_us(lambda *a: ops.wkv6(*a, chunk=64)[0],
+        from repro.kernels import tuning
+
+        us = timeit_us(lambda *a: ops.wkv6(*a)[0],
                        q, k, v, ld, iters=2, warmup=1)
-        derived = {"note": _INTERP_NOTE}
+        sig = tuning.wkv6_signature(q.shape, v.shape[-1], q.dtype,
+                                    use_u=False)
+        chunk = tuning.resolve_wkv_chunk(None, q_shape=q.shape,
+                                         v_head=v.shape[-1],
+                                         dtype=q.dtype, use_u=False)
+        derived = {"note": _INTERP_NOTE, "chunk": chunk,
+                   "tuned": bool(tuning.lookup("wkv6_fwd", sig))}
     yield BenchRecord(name=f"kernels/wkv6_{wl.knobs['impl']}",
                       us_per_call=us, derived=derived)
 
@@ -109,8 +130,14 @@ def kernels_rmsnorm(wl: Workload):
         us = timeit_us(jax.jit(lambda x, s: ref.rmsnorm_ref(x, s)), x, sc)
         derived = {}
     else:
+        from repro.kernels import tuning
+
         us = timeit_us(lambda x, s: ops.rmsnorm(x, s), x, sc,
                        iters=2, warmup=1)
-        derived = {"note": _INTERP_NOTE}
+        sig = tuning.rmsnorm_signature(x.shape[0], x.shape[1], x.dtype)
+        rows = tuning.resolve_rmsnorm_rows(None, rows=x.shape[0],
+                                           d=x.shape[1], dtype=x.dtype)
+        derived = {"note": _INTERP_NOTE, "block_rows": rows,
+                   "tuned": bool(tuning.lookup("rmsnorm_fwd", sig))}
     yield BenchRecord(name=f"kernels/rmsnorm_{wl.knobs['impl']}",
                       us_per_call=us, derived=derived)

@@ -1,0 +1,125 @@
+"""Kernel autotuning sweeps (`python -m benchmarks.run --tune`).
+
+Each scenario sweeps the Pallas tiling configs of one kernel family over
+its bench shapes via :mod:`repro.bench.tune`, persists the winners to
+``results/tuned/<backend>.json``, and yields a tuned-vs-default
+comparison as a first-class BenchRecord — so the speedup story lands in
+``results/bench/latest.jsonl`` next to every other measurement.
+
+Tagged ``tune``: excluded from normal runs (the sweep times many
+configs), opt in with ``--tune``. After a tune, any pallas-backed run of
+the same shape resolves its "auto" block sizes from the cache (see
+``repro.kernels.tuning``).
+"""
+from __future__ import annotations
+
+from repro.bench import BenchRecord, Workload, scenario
+
+_TAGS = ("tune", "kernel", "kernels", "measured")
+
+# One workload per swept shape; labels keyed to the shape signature.
+_ATTN_SHAPES = [("B1_S512_H4_KV2_D64", dict(B=1, S=512, Hq=4, Hkv=2, D=64))]
+_WKV_SHAPES = [("B1_T256_H2_K64", dict(B=1, T=256, H=2, K=64))]
+_NORM_SHAPES = [("r4096_d512", dict(rows=4096, d=512)),
+                ("r1024_d256", dict(rows=1024, d=256))]
+
+
+def _record(kind: str, label: str, res) -> BenchRecord:
+    """Fold a TuneResult into a BenchRecord (tuned >= default by
+    construction: the default config is always candidate 0)."""
+    return BenchRecord(
+        name=f"tune/{kind}/{label}", us_per_call=res.us,
+        knobs=dict(res.config),
+        derived={"tuned_us": float(res.us),
+                 "default_us": float(res.default_us),
+                 "speedup": float(res.speedup),
+                 "signature": res.signature,
+                 "n_candidates": res.n_candidates,
+                 "rejected_vmem": res.rejected_vmem})
+
+
+def _attn_inputs(spec):
+    import numpy as np
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal(
+        (spec["B"], spec["S"], spec["Hq"], spec["D"])), jnp.float32)
+    k = jnp.asarray(rng.standard_normal(
+        (spec["B"], spec["S"], spec["Hkv"], spec["D"])), jnp.float32)
+    v = jnp.asarray(rng.standard_normal(
+        (spec["B"], spec["S"], spec["Hkv"], spec["D"])), jnp.float32)
+    return q, k, v
+
+
+@scenario(
+    "tune/attention", tags=_TAGS, paper_ref="guidance for perf opts",
+    workloads=[Workload(label=lbl, knobs=dict(spec))
+               for lbl, spec in _ATTN_SHAPES])
+def tune_attention(wl: Workload):
+    """Sweep flash-attention forward block_q/block_k; persist winner."""
+    from repro.bench import tune
+
+    q, k, v = _attn_inputs(wl.knobs)
+    res = tune.tune_flash_attention(q, k, v, causal=True, iters=2,
+                                    warmup=1)
+    tune.save([res])
+    yield _record("attention", wl.label, res)
+
+
+@scenario(
+    "tune/attention_bwd", tags=_TAGS, paper_ref="guidance for perf opts",
+    workloads=[Workload(label=lbl, knobs=dict(spec))
+               for lbl, spec in _ATTN_SHAPES])
+def tune_attention_bwd(wl: Workload):
+    """Sweep the dq/dkv backward kernels' block shapes; persist winner."""
+    from repro.bench import tune
+
+    q, k, v = _attn_inputs(wl.knobs)
+    res = tune.tune_flash_attention_bwd(q, k, v, causal=True, iters=1,
+                                        warmup=1)
+    tune.save([res])
+    yield _record("attention_bwd", wl.label, res)
+
+
+@scenario(
+    "tune/wkv6", tags=_TAGS + ("ssm",), paper_ref="guidance for perf opts",
+    workloads=[Workload(label=lbl, knobs=dict(spec))
+               for lbl, spec in _WKV_SHAPES])
+def tune_wkv6(wl: Workload):
+    """Sweep the wkv6 chunk size; persist winner."""
+    import numpy as np
+    import jax.numpy as jnp
+
+    from repro.bench import tune
+
+    spec = wl.knobs
+    rng = np.random.default_rng(0)
+    shape = (spec["B"], spec["T"], spec["H"], spec["K"])
+    q = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    k = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    v = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    ld = jnp.asarray(-np.exp(rng.standard_normal(shape)), jnp.float32)
+    res = tune.tune_wkv6(q, k, v, ld, iters=2, warmup=1)
+    tune.save([res])
+    yield _record("wkv6", wl.label, res)
+
+
+@scenario(
+    "tune/rmsnorm", tags=_TAGS, paper_ref="guidance for perf opts",
+    workloads=[Workload(label=lbl, knobs=dict(spec))
+               for lbl, spec in _NORM_SHAPES])
+def tune_rmsnorm(wl: Workload):
+    """Sweep rmsnorm block_rows; persist winner."""
+    import numpy as np
+    import jax.numpy as jnp
+
+    from repro.bench import tune
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(
+        (wl.knobs["rows"], wl.knobs["d"])), jnp.float32)
+    sc = jnp.ones((wl.knobs["d"],), jnp.float32)
+    res = tune.tune_rmsnorm(x, sc, iters=5, warmup=2)
+    tune.save([res])
+    yield _record("rmsnorm", wl.label, res)

@@ -3,6 +3,7 @@
 
     PYTHONPATH=src python -m benchmarks.run [--only <substr>]
                                             [--tags tag1,tag2]
+                                            [--tune]
                                             [--json <path> | --no-json]
                                             [--list]
 
@@ -20,6 +21,11 @@ fails to import or any scenario workload raises.
 | bench_scalability      | scalability       | Table III / Fig. 11       |
 | bench_batch_precision  | deploy            | Fig. 12 / Table IV        |
 | bench_kernels          | kernels           | kernel microbenchmarks    |
+| bench_tune             | tune              | kernel autotuning sweeps  |
+
+Scenarios tagged ``tune`` (the autotuning sweeps writing
+``results/tuned/``) only run with ``--tune``; a bare ``--tune`` runs just
+them, combined with ``--only``/``--tags`` it widens the selection.
 """
 from __future__ import annotations
 
@@ -47,6 +53,7 @@ MODULES = {
     "bench_scalability": ("scalability",),
     "bench_batch_precision": ("deploy",),
     "bench_kernels": ("kernels",),
+    "bench_tune": ("tune",),
 }
 
 
@@ -83,6 +90,10 @@ def main(argv: list[str] | None = None) -> int:
                     help="substring filter on module/scenario name")
     ap.add_argument("--tags", default=None,
                     help="comma-separated tag filter (any-of)")
+    ap.add_argument("--tune", action="store_true",
+                    help="run the kernel autotuning sweeps (scenarios "
+                         "tagged `tune`, excluded from normal runs); "
+                         "winners persist to results/tuned/")
     ap.add_argument("--json", default=str(DEFAULT_JSONL), metavar="PATH",
                     help="BenchRecord JSONL output path "
                          f"(default: {DEFAULT_JSONL})")
@@ -109,6 +120,13 @@ def main(argv: list[str] | None = None) -> int:
     selected = [s for s in select(tags=tags)
                 if not args.only or args.only in s.name
                 or args.only in s.group or s.group in mod_groups]
+
+    # tune sweeps are opt-in: excluded unless --tune; a bare --tune (no
+    # other filter) runs only them
+    if not args.tune:
+        selected = [s for s in selected if "tune" not in s.tags]
+    elif not args.only and not tags:
+        selected = [s for s in selected if "tune" in s.tags]
 
     if args.list:
         for scen in selected:

@@ -8,13 +8,17 @@ Three layers:
   whose (arch x shape x mesh x knobs) sweeps are declared as
   :class:`Workload` data;
 * :mod:`repro.bench.runner` — the single runner owning timing, fail-soft
-  error capture, and result sinks.
+  error capture, and result sinks;
+* :mod:`repro.bench.tune` — the kernel autotuner (import the submodule
+  directly; kept out of the package namespace so registration-time
+  imports stay jax-free).
 """
 from repro.bench.record import (CSV_HEADER, BenchRecord, env_fingerprint,
                                 read_jsonl, write_jsonl)
 from repro.bench.runner import (BenchRunner, CsvStdoutSink, JsonlSink,
-                                ListSink, RunSummary, run_benchmarks,
-                                run_with_devices, timeit_us)
+                                ListSink, RunSummary, TimingStats,
+                                run_benchmarks, run_with_devices,
+                                timeit_us)
 from repro.bench.scenario import (BENCH_MESH, BENCH_SHAPE, REGISTRY,
                                   Scenario, Workload, groups, mesh_str,
                                   names, register, scenario, select,
@@ -23,7 +27,8 @@ from repro.bench.scenario import (BENCH_MESH, BENCH_SHAPE, REGISTRY,
 __all__ = [
     "BENCH_MESH", "BENCH_SHAPE", "BenchRecord", "BenchRunner", "CSV_HEADER",
     "CsvStdoutSink", "JsonlSink", "ListSink", "REGISTRY", "RunSummary",
-    "Scenario", "Workload", "env_fingerprint", "groups", "mesh_str", "names",
-    "read_jsonl", "register", "run_benchmarks", "run_with_devices",
-    "scenario", "select", "timeit_us", "unregister", "write_jsonl",
+    "Scenario", "TimingStats", "Workload", "env_fingerprint", "groups",
+    "mesh_str", "names", "read_jsonl", "register", "run_benchmarks",
+    "run_with_devices", "scenario", "select", "timeit_us", "unregister",
+    "write_jsonl",
 ]

@@ -62,6 +62,10 @@ class BenchRecord:
     mesh: str = ""                  # "16x16"-style
     knobs: Dict[str, Any] = field(default_factory=dict)
     us_per_call: float = 0.0
+    # per-iteration percentiles (0.0 = not measured). Serialized in JSONL;
+    # the legacy CSV keeps its mean-only `name,us_per_call,derived` shape.
+    p50_us: float = 0.0
+    p95_us: float = 0.0
     derived: Dict[str, Any] = field(default_factory=dict)
     tags: Tuple[str, ...] = ()
     paper_ref: str = ""             # "Table I / Fig. 6" etc.

@@ -34,18 +34,52 @@ SRC = REPO / "src"
 
 
 # ------------------------------------------------------------------ timing
-def timeit_us(fn, *args, iters: int = 5, warmup: int = 2) -> float:
-    """Mean wall-clock microseconds per call after ``warmup`` calls."""
+def _percentile(sorted_us: Sequence[float], q: float) -> float:
+    """Linear-interpolated percentile of an already-sorted sample list."""
+    if not sorted_us:
+        return 0.0
+    pos = (len(sorted_us) - 1) * q / 100.0
+    lo = int(pos)
+    hi = min(lo + 1, len(sorted_us) - 1)
+    return sorted_us[lo] + (sorted_us[hi] - sorted_us[lo]) * (pos - lo)
+
+
+class TimingStats(float):
+    """Mean us-per-call that also carries the per-iteration samples.
+
+    Drops in anywhere a plain float mean was expected; ``p50_us``/
+    ``p95_us``/``samples`` ride along so tuning decisions and records
+    aren't skewed by warmup jitter hiding inside a mean.
+    """
+
+    samples: Tuple[float, ...]
+    p50_us: float
+    p95_us: float
+
+    def __new__(cls, samples: Sequence[float]) -> "TimingStats":
+        samples = tuple(samples)
+        obj = super().__new__(cls, sum(samples) / len(samples))
+        obj.samples = samples
+        s = sorted(samples)
+        obj.p50_us = _percentile(s, 50.0)
+        obj.p95_us = _percentile(s, 95.0)
+        return obj
+
+
+def timeit_us(fn, *args, iters: int = 5, warmup: int = 2) -> TimingStats:
+    """Wall-clock microseconds per call after ``warmup`` calls: a
+    :class:`TimingStats` float (the mean) carrying per-iter samples."""
     import jax
 
     iters = max(1, iters)
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
+    samples = []
     for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        samples.append((time.perf_counter() - t0) * 1e6)
+    return TimingStats(samples)
 
 
 def run_with_devices(code: str, n_devices: int = 8,
@@ -149,6 +183,12 @@ class BenchRunner:
         merged.update(rec.knobs)
         rec.knobs = merged
         rec.env = rec.env or self.env
+        # a TimingStats mean carries per-iter percentiles: stamp + strip
+        us = rec.us_per_call
+        if not rec.p50_us and hasattr(us, "p50_us"):
+            rec.p50_us = float(us.p50_us)
+            rec.p95_us = float(us.p95_us)
+        rec.us_per_call = float(us)
         return rec
 
     def _emit(self, rec: BenchRecord, out: RunSummary) -> None:

@@ -193,6 +193,12 @@ class RunConfig:
     remat: bool = True
     attention_backend: str = "chunked"  # dense | chunked | pallas
     attention_chunk: int = 1024
+    # Pallas tile overrides (backend='pallas' only). None = auto: the
+    # kernels resolve tiles from the tuned-config cache written by
+    # `python -m benchmarks.run --tune` (see repro.kernels.tuning).
+    attn_block_q: Optional[int] = None
+    attn_block_k: Optional[int] = None
+    ssm_chunk: Optional[int] = None
     decode_attention: str = "partitioned"  # simple | partitioned (lse-combine)
     # §Perf opt-in flags (baseline keeps all False; see EXPERIMENTS §Perf)
     pin_mixer_output: bool = False   # bf16 TP psum before residual

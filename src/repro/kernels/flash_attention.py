@@ -6,9 +6,16 @@ VMEM scratch across kv blocks. Block shapes are MXU-aligned (bq, bk
 multiples of 128 when the sequence allows; head_dim padded to 128 lanes by
 Mosaic). GQA is handled in the kv index_map (hq -> hq // group).
 
-Fully-masked kv blocks are skipped with pl.when, so the causal lower
-triangle is the only work executed — matching the chunked-jnp stand-in the
-dry-run compiles and the flop accounting in §Roofline.
+Fully-masked kv blocks are skipped with pl.when (forward AND backward,
+including the sliding-window bound), so the causal lower triangle
+intersected with the window band is the only work executed — matching the
+chunked-jnp stand-in the dry-run compiles and the flop accounting in
+§Roofline.
+
+Tile sizes: ``block_q``/``block_k`` default to ``None`` ("auto") and
+resolve through the tuned-config cache (:mod:`repro.kernels.tuning`,
+populated by ``python -m benchmarks.run --tune``), falling back to the
+historical 128/128 constants on a cache miss.
 """
 from __future__ import annotations
 
@@ -20,6 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import tuning
 
 # jax < 0.5 ships this as TPUCompilerParams; newer releases renamed it
 _CompilerParams = getattr(pltpu, "CompilerParams", None) \
@@ -100,12 +109,16 @@ def _attn_kernel_lse(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr,
 
 
 def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
-                        block_q: int = 128, block_k: int = 128,
+                        block_q: int | None = None,
+                        block_k: int | None = None,
                         interpret: bool = False, return_lse: bool = False):
     """q: (B, Sq, Hq, D); k/v: (B, Sk, Hkv, D) -> (B, Sq, Hq, D)
-    [, lse (B, Hq, Sq)]."""
+    [, lse (B, Hq, Sq)]. block_q/block_k None = auto (tuned cache)."""
     B, Sq, Hq, D = q.shape
     _, Sk, Hkv, _ = k.shape
+    block_q, block_k = tuning.resolve_attention_blocks(
+        block_q, block_k, q_shape=q.shape, k_shape=k.shape, dtype=q.dtype,
+        causal=causal, window=window, kernel="flash_attention_fwd")
     g = Hq // Hkv
     bq = min(block_q, Sq)
     bk = min(block_k, Sk)
@@ -174,6 +187,9 @@ def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
 
     q_lo, k_lo = iq * bq, ik * bk
     live = (k_lo <= q_lo + bq - 1) if causal else True
+    if window and causal:
+        # sliding window: blocks entirely left of the band are dead too
+        live = jnp.logical_and(live, k_lo + bk - 1 >= q_lo - window + 1)
 
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32) * scale
@@ -215,6 +231,9 @@ def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
 
     q_lo, k_lo = iq * bq, ik * bk
     live = (k_lo <= q_lo + bq - 1) if causal else True
+    if window and causal:
+        # sliding window: q blocks entirely past the band see nothing here
+        live = jnp.logical_and(live, k_lo + bk - 1 >= q_lo - window + 1)
 
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32) * scale
@@ -249,11 +268,16 @@ def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
 
 
 def flash_attention_bwd(q, k, v, o, lse, do, *, causal: bool = True,
-                        window: int = 0, block_q: int = 128,
-                        block_k: int = 128, interpret: bool = False):
-    """Returns (dq, dk, dv) with q/k/v in (B, S, H, D) layout."""
+                        window: int = 0, block_q: int | None = None,
+                        block_k: int | None = None,
+                        interpret: bool = False):
+    """Returns (dq, dk, dv) with q/k/v in (B, S, H, D) layout.
+    block_q/block_k None = auto (tuned cache)."""
     B, Sq, Hq, D = q.shape
     _, Sk, Hkv, _ = k.shape
+    block_q, block_k = tuning.resolve_attention_blocks(
+        block_q, block_k, q_shape=q.shape, k_shape=k.shape, dtype=q.dtype,
+        causal=causal, window=window, kernel="flash_attention_bwd")
     g = Hq // Hkv
     bq, bk = min(block_q, Sq), min(block_k, Sk)
     nq, nk = Sq // bq, Sk // bk

@@ -3,14 +3,24 @@
 On this CPU container the kernels execute in interpret mode (the kernel
 body runs as Python/XLA on CPU); on TPU `interpret=False` compiles real
 Mosaic kernels. The model layer selects these via backend='pallas'.
+
+Tile parameters default to ``None`` ("auto"): each wrapper resolves them
+*eagerly* through the tuned-config cache (:mod:`repro.kernels.tuning`,
+written by ``python -m benchmarks.run --tune``) before handing concrete
+ints to jit as static args — so freshly tuned winners take effect in the
+same process via a clean retrace, and a cache-less checkout keeps the
+historical constants (128/128 blocks, chunk 64, 256 rows).
 """
 from __future__ import annotations
 
 from functools import partial
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import tuning
 from repro.kernels.flash_attention import (flash_attention_bwd,
                                            flash_attention_fwd)
 from repro.kernels.rmsnorm import rmsnorm_fwd
@@ -20,42 +30,55 @@ _ON_TPU = any(d.platform == "tpu" for d in jax.devices())
 INTERPRET = not _ON_TPU
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
-def _flash_attention(q, k, v, causal, window, block_q, block_k):
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _flash_attention(q, k, v, causal, window, block_q, block_k,
+                     bwd_block_q, bwd_block_k):
     return flash_attention_fwd(q, k, v, causal=causal, window=window,
                                block_q=block_q, block_k=block_k,
                                interpret=INTERPRET)
 
 
-def _fa_fwd(q, k, v, causal, window, block_q, block_k):
+def _fa_fwd(q, k, v, causal, window, block_q, block_k, bwd_block_q,
+            bwd_block_k):
     o, lse = flash_attention_fwd(q, k, v, causal=causal, window=window,
                                  block_q=block_q, block_k=block_k,
                                  interpret=INTERPRET, return_lse=True)
     return o, (q, k, v, o, lse)
 
 
-def _fa_bwd(causal, window, block_q, block_k, res, do):
+def _fa_bwd(causal, window, block_q, block_k, bwd_block_q, bwd_block_k,
+            res, do):
     q, k, v, o, lse = res
     return flash_attention_bwd(q, k, v, o, lse, do, causal=causal,
-                               window=window, block_q=block_q,
-                               block_k=block_k, interpret=INTERPRET)
+                               window=window, block_q=bwd_block_q,
+                               block_k=bwd_block_k, interpret=INTERPRET)
 
 
 _flash_attention.defvjp(_fa_fwd, _fa_bwd)
 
+_flash_attention_jit = jax.jit(_flash_attention,
+                               static_argnums=(3, 4, 5, 6, 7, 8))
 
-@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k"))
+
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
-                    block_q: int = 128, block_k: int = 128):
+                    block_q: int | None = None,
+                    block_k: int | None = None):
     """Differentiable flash attention: Pallas forward AND backward kernels
-    (dq + dkv with saved logsumexp), custom_vjp-wired."""
-    return _flash_attention(q, k, v, causal, window, block_q, block_k)
+    (dq + dkv with saved logsumexp), custom_vjp-wired. block_q/block_k
+    None = auto: forward and backward each resolve their own tuned tile
+    config; an explicit value applies to both."""
+    bq, bk = tuning.resolve_attention_blocks(
+        block_q, block_k, q_shape=q.shape, k_shape=k.shape, dtype=q.dtype,
+        causal=causal, window=window, kernel="flash_attention_fwd")
+    bq_b, bk_b = tuning.resolve_attention_blocks(
+        block_q, block_k, q_shape=q.shape, k_shape=k.shape, dtype=q.dtype,
+        causal=causal, window=window, kernel="flash_attention_bwd")
+    return _flash_attention_jit(q, k, v, causal, window, bq, bk, bq_b,
+                                bk_b)
 
 
 @partial(jax.jit, static_argnames=("chunk",))
-def wkv6(q, k, v, ld, u=None, initial_state=None, *, chunk: int = 64):
-    """Matches models.ssm.linear_attention's (o, state) contract. A nonzero
-    initial_state is folded in by running the state-only recurrence first."""
+def _wkv6_jit(q, k, v, ld, u=None, initial_state=None, *, chunk: int = 64):
     o, state = wkv6_fwd(q, k, v, ld, u, chunk=chunk, interpret=INTERPRET)
     if initial_state is not None:
         # contribution of the carried-in state: q'_t @ (decay_t . S0)
@@ -71,6 +94,26 @@ def wkv6(q, k, v, ld, u=None, initial_state=None, *, chunk: int = 64):
     return o, state
 
 
-@partial(jax.jit, static_argnames=("eps",))
-def rmsnorm(x, scale, *, eps: float = 1e-5):
-    return rmsnorm_fwd(x, scale, eps=eps, interpret=INTERPRET)
+def wkv6(q, k, v, ld, u=None, initial_state=None, *,
+         chunk: int | None = None):
+    """Matches models.ssm.linear_attention's (o, state) contract. A nonzero
+    initial_state is folded in by running the state-only recurrence first.
+    chunk None = auto (tuned cache -> 64)."""
+    c = tuning.resolve_wkv_chunk(chunk, q_shape=q.shape,
+                                 v_head=v.shape[-1], dtype=q.dtype,
+                                 use_u=u is not None)
+    return _wkv6_jit(q, k, v, ld, u, initial_state, chunk=c)
+
+
+@partial(jax.jit, static_argnames=("eps", "block_rows"))
+def _rmsnorm_jit(x, scale, *, eps: float = 1e-5, block_rows: int = 256):
+    return rmsnorm_fwd(x, scale, eps=eps, block_rows=block_rows,
+                       interpret=INTERPRET)
+
+
+def rmsnorm(x, scale, *, eps: float = 1e-5, block_rows: int | None = None):
+    """Fused RMSNorm. block_rows None = auto (tuned cache -> 256)."""
+    br = tuning.resolve_rmsnorm_rows(
+        block_rows, rows=int(np.prod(x.shape[:-1], dtype=np.int64)),
+        d=x.shape[-1], dtype=x.dtype)
+    return _rmsnorm_jit(x, scale, eps=eps, block_rows=br)

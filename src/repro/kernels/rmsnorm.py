@@ -1,5 +1,10 @@
 """Fused RMSNorm(+scale) — Pallas TPU kernel. One row-block per grid step,
-mean-square in f32, single pass over VMEM-resident rows."""
+mean-square in f32, single pass over VMEM-resident rows.
+
+``block_rows=None`` ("auto") resolves through the tuned-config cache
+(:mod:`repro.kernels.tuning`, populated by ``benchmarks.run --tune``),
+falling back to the historical 256-row blocks.
+"""
 from __future__ import annotations
 
 import functools
@@ -7,6 +12,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import tuning
 
 
 def _rmsnorm_kernel(x_ref, scale_ref, o_ref, *, eps: float):
@@ -16,14 +23,17 @@ def _rmsnorm_kernel(x_ref, scale_ref, o_ref, *, eps: float):
                   * scale_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
 
 
-def rmsnorm_fwd(x, scale, *, eps: float = 1e-5, block_rows: int = 256,
-                interpret: bool = False):
-    """x: (..., d); scale: (d,). Fused in one VMEM pass per row block."""
+def rmsnorm_fwd(x, scale, *, eps: float = 1e-5,
+                block_rows: int | None = None, interpret: bool = False):
+    """x: (..., d); scale: (d,). Fused in one VMEM pass per row block.
+    block_rows None = auto (tuned cache)."""
     orig_shape = x.shape
     d = x.shape[-1]
     rows = 1
     for s in x.shape[:-1]:
         rows *= s
+    block_rows = tuning.resolve_rmsnorm_rows(block_rows, rows=rows, d=d,
+                                             dtype=x.dtype)
     x2 = x.reshape(rows, d)
     br = min(block_rows, rows)
     pad = (-rows) % br

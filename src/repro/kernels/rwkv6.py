@@ -7,12 +7,20 @@ state lives in VMEM scratch across chunks. Per chunk the kernel computes
   S  <- exp(p_last) . S  +  sum_s (k_s exp(p_last - p_s)) (x) v_s
 
 with all decay factors exp(<=0) (numerically safe; see models/ssm.py for
-the derivation). The intra-chunk pairwise-decay tensor is (c, c, K) in
-VMEM: c=64, K=64 -> 1 MB f32, well inside the 16 MB budget, and the chunk
-matmuls are MXU-aligned at (64, 64).
+the derivation).
+
+The intra-chunk attention A[t,s] = q_t . (k_s exp(w_t - p_s)) is computed
+as a decay-rescaled matmul (q exp(w)) @ (k exp(-p)).T so the inner loop is
+MXU work; exp(-p) grows with the in-chunk decay range, so when that range
+exceeds SAFE_DECAY_RANGE the kernel falls back to the masked (c, c, K)
+pairwise-decay tensor (c=64, K=64 -> 1 MB f32, well inside the 16 MB
+budget). Chunk matmuls are MXU-aligned at (64, 64).
 
 Supports both rwkv6 mode (bonus u, current token excluded from the state
-it sees) and SSD mode (u=None, current token included).
+it sees) and SSD mode (u=None, current token included). ``chunk=None``
+("auto") resolves through the tuned-config cache
+(:mod:`repro.kernels.tuning`, populated by ``benchmarks.run --tune``),
+falling back to the historical chunk=64.
 """
 from __future__ import annotations
 
@@ -23,9 +31,16 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tuning
+
 # jax < 0.5 ships this as TPUCompilerParams; newer releases renamed it
 _CompilerParams = getattr(pltpu, "CompilerParams", None) \
     or pltpu.TPUCompilerParams
+
+# Largest in-chunk |cumsum(ld)| for which the decay-rescaled matmul path
+# is used: factors stay <= exp(30) ~ 1e13, far from f32 overflow even
+# after the (masked-out) upper-triangle products and the K-dim reduction.
+SAFE_DECAY_RANGE = 30.0
 
 
 def _wkv_kernel(q_ref, k_ref, v_ref, ld_ref, u_ref, o_ref, state_out_ref,
@@ -46,13 +61,30 @@ def _wkv_kernel(q_ref, k_ref, v_ref, ld_ref, u_ref, o_ref, state_out_ref,
     p_exc = p_inc - ld
     w_exp = p_exc if use_u else p_inc
 
-    # intra-chunk pairwise-decay attention
-    diff = w_exp[:, None, :] - p_inc[None, :, :]              # (c, c, K)
+    # intra-chunk attention A[t,s] = q_t . (k_s exp(w_t - p_s)), s <(=) t
     t_i = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
     s_i = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
     mask = (t_i > s_i) if use_u else (t_i >= s_i)
-    diff = jnp.where(mask[:, :, None], diff, -jnp.inf)
-    a = jnp.einsum("tk,sk,tsk->ts", q, k, jnp.exp(diff))
+
+    def _intra_matmul(_):
+        # decay-rescaled matmul (MXU path): exp(w) <= 1 and exp(-p) is
+        # bounded by exp(SAFE_DECAY_RANGE), so both factors are finite
+        qs = q * jnp.exp(w_exp)
+        ks = k * jnp.exp(-p_inc)
+        a = jax.lax.dot_general(qs, ks, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        return jnp.where(mask, a, 0.0)
+
+    def _intra_pairwise(_):
+        # masked fallback: exact per-pair decay, (c, c, K) tensor in VMEM
+        diff = w_exp[:, None, :] - p_inc[None, :, :]          # (c, c, K)
+        diff = jnp.where(mask[:, :, None], diff, -jnp.inf)
+        return jnp.einsum("tk,sk,tsk->ts", q, k, jnp.exp(diff))
+
+    # p_inc is a cumsum of ld <= 0, so -min(p_inc) is the chunk's largest
+    # decay magnitude; beyond SAFE_DECAY_RANGE exp(-p_inc) would overflow
+    a = jax.lax.cond(-jnp.min(p_inc) < SAFE_DECAY_RANGE,
+                     _intra_matmul, _intra_pairwise, 0)
     o = jax.lax.dot_general(a.astype(v.dtype), v,
                             (((1,), (0,)), ((), ())),
                             preferred_element_type=jnp.float32)
@@ -78,12 +110,14 @@ def _wkv_kernel(q_ref, k_ref, v_ref, ld_ref, u_ref, o_ref, state_out_ref,
         state_out_ref[0, 0] = s_scr[...]
 
 
-def wkv6_fwd(q, k, v, ld, u=None, *, chunk: int = 64,
+def wkv6_fwd(q, k, v, ld, u=None, *, chunk: int | None = None,
              interpret: bool = False):
     """q/k/ld: (B, T, H, K); v: (B, T, H, V); u: (H, K) or None.
-    Returns (o (B,T,H,V), state (B,H,K,V))."""
+    Returns (o (B,T,H,V), state (B,H,K,V)). chunk None = auto (tuned)."""
     B, T, H, K = q.shape
     V = v.shape[-1]
+    chunk = tuning.resolve_wkv_chunk(chunk, q_shape=q.shape, v_head=V,
+                                     dtype=q.dtype, use_u=u is not None)
     c = min(chunk, T)
     assert T % c == 0, (T, c)
     n = T // c

@@ -165,7 +165,10 @@ def decode_attention_simple(q, k_cache, v_cache, cache_len) -> jnp.ndarray:
 
 
 def attention(q, k, v, *, backend: str, causal: bool, window: int = 0,
-              chunk: int = 1024) -> jnp.ndarray:
+              chunk: int = 1024, block_q: int = None,
+              block_k: int = None) -> jnp.ndarray:
+    """block_q/block_k only apply to the pallas backend; None = auto
+    (resolved from the tuned-config cache, see repro.kernels.tuning)."""
     if backend == "dense":
         return dense_attention(q, k, v, causal=causal, window=window)
     if backend == "chunked":
@@ -173,5 +176,6 @@ def attention(q, k, v, *, backend: str, causal: bool, window: int = 0,
                                  chunk=chunk)
     if backend == "pallas":
         from repro.kernels import ops as kops
-        return kops.flash_attention(q, k, v, causal=causal, window=window)
+        return kops.flash_attention(q, k, v, causal=causal, window=window,
+                                    block_q=block_q, block_k=block_k)
     raise ValueError(f"unknown attention backend {backend!r}")

@@ -176,16 +176,19 @@ def chunked_linear_attention(q, k, v, ld, u=None, initial_state=None,
 
 
 def linear_attention(q, k, v, ld, u=None, initial_state=None, *,
-                     backend: str = "chunked", chunk: int = 64,
+                     backend: str = "chunked", chunk: int = None,
                      factored: bool = False):
+    """chunk None = auto: the pallas backend resolves its tile from the
+    tuned-config cache (repro.kernels.tuning); chunked falls back to 64."""
     if backend == "recurrent":
         return recurrent_linear_attention(q, k, v, ld, u, initial_state)
     if backend == "chunked":
         return chunked_linear_attention(q, k, v, ld, u, initial_state,
-                                        chunk=chunk, factored=factored)
+                                        chunk=chunk if chunk else 64,
+                                        factored=factored)
     if backend == "pallas":
         from repro.kernels import ops as kops
-        return kops.wkv6(q, k, v, ld, u, initial_state)
+        return kops.wkv6(q, k, v, ld, u, initial_state, chunk=chunk)
     raise ValueError(backend)
 
 
@@ -220,8 +223,12 @@ def _token_shift(x, prev):
 
 
 def rwkv6_time_mix(p, x, cfg: ModelConfig, *, backend: str,
-                   state=None, shift_prev=None, factored: bool = False):
-    """x: (B,T,d). Returns (out, (wkv_state, last_token))."""
+                   state=None, shift_prev=None, factored: bool = False,
+                   chunk: int = None):
+    """x: (B,T,d). Returns (out, (wkv_state, last_token)).
+
+    chunk None = auto: pallas resolves the tuned tile, other backends use
+    cfg.ssm.chunk_size; an explicit value overrides both."""
     B, T, d = x.shape
     hs = cfg.ssm.head_size
     H = d // hs
@@ -236,10 +243,11 @@ def rwkv6_time_mix(p, x, cfg: ModelConfig, *, backend: str,
     # data-dependent per-channel log decay (LoRA), always negative
     ld = -jnp.exp(p["w0"] + jnp.tanh(xw @ p["wa"]) @ p["wb"])
     ld = jnp.clip(ld, -12.0, -1e-4).reshape(B, T, H, hs)
+    if chunk is None and backend != "pallas":
+        chunk = cfg.ssm.chunk_size
     o, new_state = linear_attention(r, k, v, ld, u=p["u"],
                                     initial_state=state, backend=backend,
-                                    chunk=cfg.ssm.chunk_size,
-                                    factored=factored)
+                                    chunk=chunk, factored=factored)
     # per-head group norm
     of = o.astype(jnp.float32)
     mean = of.mean(-1, keepdims=True)
@@ -293,8 +301,9 @@ def ssd_init(key, cfg: ModelConfig, dtype) -> dict:
 
 
 def ssd_mix(p, x, cfg: ModelConfig, *, backend: str, state=None,
-            factored: bool = False):
-    """Mamba-2-style SSD head mix. x:(B,T,dm) -> (out, state)."""
+            factored: bool = False, chunk: int = None):
+    """Mamba-2-style SSD head mix. x:(B,T,dm) -> (out, state).
+    chunk: see rwkv6_time_mix."""
     B, T, dm = x.shape
     hs = cfg.ssm.head_size
     N = cfg.ssm.state_size
@@ -307,10 +316,11 @@ def ssd_mix(p, x, cfg: ModelConfig, *, backend: str, state=None,
     ld = (-dt * jnp.exp(p["A_log"]))[..., None]           # (B,T,H,1) scalar/head
     ld = jnp.broadcast_to(jnp.clip(ld, -12.0, -1e-6), (B, T, H, N))
     k = Bm * dt[..., None].astype(Bm.dtype)               # discretized input
+    if chunk is None and backend != "pallas":
+        chunk = cfg.ssm.chunk_size
     o, new_state = linear_attention(Cm, k, xin, ld, u=None,
                                     initial_state=state, backend=backend,
-                                    chunk=cfg.ssm.chunk_size,
-                                    factored=factored)
+                                    chunk=chunk, factored=factored)
     o = o + p["D"][:, None] * xin.astype(jnp.float32)
     out = (o.reshape(B, T, H * hs).astype(x.dtype) * z) @ p["wo"]
     return out, new_state

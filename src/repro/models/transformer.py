@@ -55,6 +55,13 @@ class Runtime:
     # all-reduces to recombine cotangents in backward (measured: ~97% of
     # qwen1.5-110b's collective bytes).
     norm_local: bool = False
+    # Pallas tile overrides for backend='pallas'. None = auto: resolved
+    # per (kernel, shape, dtype, backend) from the tuned-config cache
+    # (repro.kernels.tuning, written by `benchmarks.run --tune`), falling
+    # back to the kernel defaults on a cache miss.
+    attn_block_q: Optional[int] = None
+    attn_block_k: Optional[int] = None
+    ssm_chunk: Optional[int] = None
 
 
 def _constrain(x, rt: Runtime):
@@ -148,7 +155,8 @@ def layer_apply(p, x, cfg: ModelConfig, rt: Runtime, positions,
     if cfg.family == "ssm":
         h, (state, last_tok) = ssm_mod.rwkv6_time_mix(
             p["time_mix"], _norm(p["norm1"], x, cfg, rt), cfg,
-            backend=rt.ssm_backend, factored=rt.ssm_factored)
+            backend=rt.ssm_backend, factored=rt.ssm_factored,
+            chunk=rt.ssm_chunk)
         x = _constrain(x + h, rt)
         h, last_tok2 = ssm_mod.rwkv6_channel_mix(
             p["channel_mix"], _norm(p["norm2"], x, cfg, rt))
@@ -162,7 +170,8 @@ def layer_apply(p, x, cfg: ModelConfig, rt: Runtime, positions,
     q, k = _rope_q_k(cfg, q, k, positions)
     window = cfg.window if cfg.attention_kind == "sliding" else 0
     o = attn_mod.attention(q, k, v, backend=rt.attention_backend,
-                           causal=causal, window=window, chunk=rt.chunk)
+                           causal=causal, window=window, chunk=rt.chunk,
+                           block_q=rt.attn_block_q, block_k=rt.attn_block_k)
     h = o.reshape(*x.shape[:-1], -1) @ p["attn"]["wo"]
     cache_entry = {}
     if return_cache:
@@ -178,7 +187,8 @@ def layer_apply(p, x, cfg: ModelConfig, rt: Runtime, positions,
     if cfg.family == "hybrid":
         h_ssm, ssd_state = ssm_mod.ssd_mix(p["ssm"], h_in, cfg,
                                            backend=rt.ssm_backend,
-                                           factored=rt.ssm_factored)
+                                           factored=rt.ssm_factored,
+                                           chunk=rt.ssm_chunk)
         h = (h + h_ssm) * 0.5
         if return_cache:
             cache_entry["ssd_state"] = ssd_state
@@ -191,7 +201,9 @@ def layer_apply(p, x, cfg: ModelConfig, rt: Runtime, positions,
         h_in = _norm(p["norm_cross"], x, cfg, rt)
         q, ck, cv = attn_mod.project_qkv(p["cross_attn"], h_in, enc_out, cfg)
         o = attn_mod.attention(q, ck, cv, backend=rt.attention_backend,
-                               causal=False, chunk=rt.chunk)
+                               causal=False, chunk=rt.chunk,
+                               block_q=rt.attn_block_q,
+                               block_k=rt.attn_block_k)
         x = _constrain(
             x + o.reshape(*x.shape[:-1], -1) @ p["cross_attn"]["wo"], rt)
         if return_cache:

@@ -45,6 +45,9 @@ def make_runtime(rcfg: RunConfig, *, for_decode: bool = False) -> Runtime:
         ssm_factored=rcfg.ssm_factored,
         layers_per_block=rcfg.layers_per_block,
         norm_local=rcfg.norm_local,
+        attn_block_q=rcfg.attn_block_q,
+        attn_block_k=rcfg.attn_block_k,
+        ssm_chunk=rcfg.ssm_chunk,
     )
 
 

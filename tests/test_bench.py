@@ -8,9 +8,9 @@ import json
 import pytest
 
 from repro.bench import (BenchRecord, BenchRunner, CSV_HEADER, CsvStdoutSink,
-                         JsonlSink, ListSink, Scenario, Workload,
-                         read_jsonl, register, scenario, select, unregister,
-                         write_jsonl)
+                         JsonlSink, ListSink, Scenario, TimingStats,
+                         Workload, read_jsonl, register, scenario, select,
+                         unregister, write_jsonl)
 from repro.bench.scenario import REGISTRY
 
 
@@ -48,6 +48,34 @@ def test_jsonl_file_round_trip(tmp_path):
                         derived={"m": i}) for i in range(3)]
     path = write_jsonl(recs, tmp_path / "out" / "r.jsonl")
     assert read_jsonl(path) == recs
+
+
+# ----------------------------------------------------------- timing stats
+def test_timing_stats_is_a_float_mean_with_percentiles():
+    ts = TimingStats([10.0, 20.0, 30.0, 40.0, 100.0])
+    assert float(ts) == pytest.approx(40.0)      # drops in as the mean
+    assert ts == pytest.approx(40.0)
+    assert ts.p50_us == pytest.approx(30.0)
+    assert ts.p95_us == pytest.approx(88.0)      # interpolated
+    assert ts.samples == (10.0, 20.0, 30.0, 40.0, 100.0)
+
+
+def test_runner_stamps_percentiles_from_timing_stats():
+    scen = Scenario(
+        name="_test/p50",
+        fn=lambda wl: [BenchRecord(
+            name="_test/p50/r",
+            us_per_call=TimingStats([1.0, 2.0, 9.0]))],
+        group="_test", workloads=(Workload(),))
+    rec = BenchRunner().run([scen]).records[0]
+    assert rec.us_per_call == pytest.approx(4.0)
+    assert type(rec.us_per_call) is float         # stripped for JSON
+    assert rec.p50_us == pytest.approx(2.0)
+    assert rec.p95_us == pytest.approx(8.3)
+    # percentiles survive the JSONL round trip; legacy CSV is unchanged
+    back = BenchRecord.from_json_line(rec.to_json_line())
+    assert back.p50_us == rec.p50_us and back.p95_us == rec.p95_us
+    assert rec.csv_line() == "_test/p50/r,4.0,"
 
 
 # --------------------------------------------------------------- registry

@@ -93,6 +93,42 @@ def test_wkv6_matches_recurrence(mode, t, h, kdim, chunk, dtype):
                                atol=tol, rtol=tol)
 
 
+def test_wkv6_matmul_fast_path_matches_ref():
+    """Mild decay keeps every chunk on the decay-rescaled-matmul path
+    (in-chunk range << SAFE_DECAY_RANGE); parity vs the exact recurrence."""
+    rng = np.random.default_rng(1)
+    B, T, H, K = 2, 128, 2, 32
+    q = _rand(rng, (B, T, H, K), jnp.float32)
+    k = _rand(rng, (B, T, H, K), jnp.float32)
+    v = _rand(rng, (B, T, H, K), jnp.float32)
+    ld = jnp.full((B, T, H, K), -0.01, jnp.float32)   # range 0.64 per chunk
+    for u in (None, jnp.asarray(rng.standard_normal((H, K)), jnp.float32)):
+        o, s = ops.wkv6(q, k, v, ld, u, chunk=64)
+        ow, sw = ref.wkv6_ref(q, k, v, ld, u)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(ow),
+                                   atol=1e-3, rtol=1e-3)
+        np.testing.assert_allclose(np.asarray(s), np.asarray(sw),
+                                   atol=1e-3, rtol=1e-3)
+
+
+def test_wkv6_extreme_decay_uses_masked_fallback():
+    """Near-maximal decay (range ~ 12*chunk >> SAFE_DECAY_RANGE) must take
+    the pairwise fallback and stay finite + exact."""
+    rng = np.random.default_rng(2)
+    B, T, H, K = 1, 128, 1, 16
+    q = _rand(rng, (B, T, H, K), jnp.float32)
+    k = _rand(rng, (B, T, H, K), jnp.float32)
+    v = _rand(rng, (B, T, H, K), jnp.float32)
+    ld = jnp.full((B, T, H, K), -11.5, jnp.float32)
+    o, s = ops.wkv6(q, k, v, ld, None, chunk=64)
+    assert np.isfinite(np.asarray(o)).all()
+    ow, sw = ref.wkv6_ref(q, k, v, ld, None)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(ow),
+                               atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sw),
+                               atol=1e-3, rtol=1e-3)
+
+
 def test_wkv6_long_sequence_stability():
     """Decay products over 4k tokens must not overflow/underflow."""
     rng = np.random.default_rng(0)
