@@ -21,6 +21,7 @@ fails to import or any scenario workload raises.
 | bench_scalability      | scalability       | Table III / Fig. 11       |
 | bench_batch_precision  | deploy            | Fig. 12 / Table IV        |
 | bench_kernels          | kernels           | kernel microbenchmarks    |
+| bench_serving          | serving           | Tier-2 serving latency    |
 | bench_tune             | tune              | kernel autotuning sweeps  |
 
 Scenarios tagged ``tune`` (the autotuning sweeps writing
@@ -53,6 +54,7 @@ MODULES = {
     "bench_scalability": ("scalability",),
     "bench_batch_precision": ("deploy",),
     "bench_kernels": ("kernels",),
+    "bench_serving": ("serving",),
     "bench_tune": ("tune",),
 }
 

@@ -1,8 +1,10 @@
-"""Batched serving example: prefill a batch of prompts, then decode with
-the jitted single-token step (ring-buffer cache for the sliding-window
-hybrid arch; recurrent state for rwkv6).
+"""Request-level serving example: a synthetic Poisson request stream
+through the continuous-batching (or lockstep static) scheduler — KV-slot
+pool, per-request TTFT / per-token latency, goodput (ring-buffer cache
+for the sliding-window hybrid arch; recurrent state for rwkv6).
 
     PYTHONPATH=src python examples/serve_batch.py [--arch hymba-1.5b]
+                                                  [--scheduler static]
 """
 import argparse
 import sys
@@ -17,8 +19,13 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="hymba-1.5b")
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--scheduler", default="continuous",
+                    choices=("static", "continuous"))
+    ap.add_argument("--offered-load", type=float, default=0.0)
     args = ap.parse_args()
     serve_main(["--arch", args.arch, "--batch", str(args.batch),
+                "--scheduler", args.scheduler,
+                "--offered-load", str(args.offered_load),
                 "--prompt-len", "64", "--max-new-tokens", "32"])
 
 

@@ -66,6 +66,9 @@ class BenchRecord:
     # the legacy CSV keeps its mean-only `name,us_per_call,derived` shape.
     p50_us: float = 0.0
     p95_us: float = 0.0
+    # serving scenarios: median time-to-first-token (0.0 = not a serving
+    # measurement). JSONL only, like the percentiles.
+    ttft_us: float = 0.0
     derived: Dict[str, Any] = field(default_factory=dict)
     tags: Tuple[str, ...] = ()
     paper_ref: str = ""             # "Table I / Fig. 6" etc.

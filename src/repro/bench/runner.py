@@ -34,14 +34,7 @@ SRC = REPO / "src"
 
 
 # ------------------------------------------------------------------ timing
-def _percentile(sorted_us: Sequence[float], q: float) -> float:
-    """Linear-interpolated percentile of an already-sorted sample list."""
-    if not sorted_us:
-        return 0.0
-    pos = (len(sorted_us) - 1) * q / 100.0
-    lo = int(pos)
-    hi = min(lo + 1, len(sorted_us) - 1)
-    return sorted_us[lo] + (sorted_us[hi] - sorted_us[lo]) * (pos - lo)
+from repro.core.metrics import percentile as _percentile  # noqa: E402
 
 
 class TimingStats(float):

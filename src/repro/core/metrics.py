@@ -68,6 +68,20 @@ def activation_bytes_estimate(num_layers: int, batch: float, seq: float,
     return num_layers * tensors_per_layer * batch * seq * d_model * bytes_per
 
 
+# ---------------------------------------------------------------- samples
+def percentile(sorted_samples: Sequence[float], q: float) -> float:
+    """Linear-interpolated percentile of an already-sorted sample list —
+    the one implementation behind bench TimingStats and the serving
+    latency summaries. Empty input -> 0.0."""
+    if not sorted_samples:
+        return 0.0
+    pos = (len(sorted_samples) - 1) * q / 100.0
+    lo = int(pos)
+    hi = min(lo + 1, len(sorted_samples) - 1)
+    return sorted_samples[lo] + (sorted_samples[hi] - sorted_samples[lo]) \
+        * (pos - lo)
+
+
 # ------------------------------------------------- TPU-adapted allocation
 MXU_TILE = (8, 128)          # sublane x lane granularity for one MXU pass
 
@@ -96,6 +110,18 @@ def li_over_tasks(tasks: Iterable[TaskStat]) -> float:
     tasks = list(tasks)
     return load_imbalance([t.resources for t in tasks],
                           [t.throughput for t in tasks])
+
+
+def slot_load_balance(slot_tokens) -> float:
+    """Eq. 3 specialization for serving KV slots: each slot is one unit
+    of resource, throughput_i = tokens served by slot i. 1.0 = every slot
+    carried equal work; ->0 = a slot sat (mostly) idle while others
+    served — the request-level analogue of the paper's 'one starved task
+    bounds the system' load-balance reading."""
+    tokens = np.asarray(slot_tokens, dtype=np.float64)
+    if tokens.size == 0:
+        return 1.0
+    return load_imbalance(np.ones_like(tokens), tokens)
 
 
 def expert_load_imbalance(expert_load: np.ndarray) -> float:

@@ -36,9 +36,11 @@ class ScalePoint:
 def measure_step(fn: Callable, args: tuple, *, iters: int = 5,
                  warmup: int = 2) -> float:
     """Median wall-clock seconds for a jitted step on this host."""
+    # block each warmup call (matching bench/runner.timeit_us): blocking
+    # only the last one lets queued warmup work leak into the first timed
+    # iteration and skews the median low
     for _ in range(warmup):
-        out = fn(*args)
-    jax.block_until_ready(out)
+        jax.block_until_ready(fn(*args))
     times = []
     for _ in range(iters):
         t0 = time.perf_counter()

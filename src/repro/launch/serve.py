@@ -1,53 +1,99 @@
 """Serving launcher: `python -m repro.launch.serve --arch <id> [...]` —
-prefill a batch of prompts and decode with the jitted single-token step."""
+request-level serving with a static (lockstep) or continuous-batching
+scheduler over a synthetic Poisson request stream.
+
+    --scheduler continuous --offered-load 32 --num-requests 8
+
+prints per-request TTFT / per-token latency percentiles, goodput, and
+slot occupancy (the Tier-2 deployment metrics); `--scheduler static`
+runs the same workload through the lockstep baseline for comparison.
+"""
 from __future__ import annotations
 
 import argparse
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import RunConfig, ShapeConfig, get_arch, reduced
+from repro.data.pipeline import synth_requests
 from repro.launch.mesh import make_mesh, set_mesh
-from repro.models.frontends import synth_batch
 from repro.runtime.elastic import choose_mesh
-from repro.runtime.serve_loop import generate
-from repro.runtime.steps import build_decode_step, build_prefill_step
+from repro.runtime.steps import build_serve_steps
+from repro.serving import make_engine
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--max-new-tokens", type=int, default=32)
-    ap.add_argument("--reduced", action="store_true", default=True)
-    args = ap.parse_args(argv)
-
-    cfg = get_arch(args.arch)
-    if args.reduced:
-        cfg = reduced(cfg)
-    span = args.prompt_len + args.max_new_tokens
+def build_engine(arch: str, *, batch: int, prompt_len: int,
+                 max_new_tokens: int, scheduler: str = "continuous",
+                 use_reduced: bool = True, reduce_kw=None,
+                 greedy: bool = True, eos_id=None, seed: int = 0,
+                 clock=None):
+    """Build a serving engine for ``arch`` (the launcher's plumbing,
+    importable so benchmarks and tests share it). ``reduce_kw`` overrides
+    the reduction sizes (layers/d_model/vocab/d_ff — the benchmarks use a
+    smaller cell than the CLI default). Returns (engine, cfg)."""
+    cfg = get_arch(arch)
+    if use_reduced:
+        cfg = reduced(cfg, **(reduce_kw or {}))
+    span = prompt_len + max_new_tokens
     mesh_cfg = choose_mesh(jax.device_count())
-    shape = ShapeConfig("serve", "decode", span, args.batch)
+    shape = ShapeConfig("serve", "decode", span, batch)
     rcfg = RunConfig(model=cfg, shape=shape, mesh=mesh_cfg,
                      attention_backend="dense", param_dtype="float32",
                      decode_attention="simple")
     mesh = make_mesh(mesh_cfg)
     with set_mesh(mesh):
-        prefill_fn, model = build_prefill_step(rcfg)
-        decode_fn, dmodel = build_decode_step(rcfg)
-        params = model.init_params(jax.random.PRNGKey(0))
-        batch = synth_batch(cfg, args.batch, args.prompt_len, kind="prefill")
-        jit_prefill = jax.jit(lambda p, b: model.prefill(p, b, span))
-        jit_decode = jax.jit(dmodel.decode_step, donate_argnums=(1,))
-        res = generate(jit_prefill, jit_decode, params, batch,
-                       prompt_len=args.prompt_len,
-                       max_new_tokens=args.max_new_tokens, cache_span=span)
-    print(f"generated {res.tokens.shape} tokens  "
-          f"prefill={res.prefill_s:.3f}s decode={res.decode_s:.3f}s "
-          f"throughput={res.tokens_per_s:.1f} tok/s")
-    return res
+        prefill_fn, decode_fn, model = build_serve_steps(rcfg)
+        params = model.init_params(jax.random.PRNGKey(seed))
+    engine = make_engine(scheduler, prefill_fn, decode_fn, params,
+                         model.cache_init, slots=batch, cache_span=span,
+                         eos_id=eos_id, greedy=greedy, seed=seed,
+                         clock=clock)
+    return engine, cfg
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="KV slots (continuous) / batch size (static)")
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--max-new-tokens", type=int, default=32)
+    ap.add_argument("--scheduler", choices=("static", "continuous"),
+                    default="continuous")
+    ap.add_argument("--num-requests", type=int, default=8)
+    ap.add_argument("--offered-load", type=float, default=0.0,
+                    help="Poisson arrival rate in req/s (0 = burst at t=0)")
+    ap.add_argument("--eos-id", type=int, default=-1,
+                    help="EOS token id for early termination (<0 disables)")
+    ap.add_argument("--sample", action="store_true",
+                    help="sample tokens instead of greedy argmax")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    args = ap.parse_args(argv)
+
+    engine, cfg = build_engine(
+        args.arch, batch=args.batch, prompt_len=args.prompt_len,
+        max_new_tokens=args.max_new_tokens, scheduler=args.scheduler,
+        use_reduced=args.reduced, greedy=not args.sample,
+        eos_id=args.eos_id if args.eos_id >= 0 else None, seed=args.seed)
+    requests = synth_requests(cfg, args.num_requests, args.prompt_len,
+                              max_new_tokens=args.max_new_tokens,
+                              rate_per_s=args.offered_load, seed=args.seed)
+    engine.warmup(args.prompt_len)
+    report = engine.run(requests)
+    s = report.summary()
+    print(f"[{s['scheduler']}] {s['completed']}/{len(requests)} requests, "
+          f"{s['total_new_tokens']} tokens in {s['makespan_s']:.3f}s  "
+          f"goodput={s['goodput_rps']:.2f} req/s "
+          f"({s['goodput_tps']:.1f} tok/s)")
+    print(f"  ttft p50={s['ttft_p50_s'] * 1e3:.1f}ms "
+          f"p95={s['ttft_p95_s'] * 1e3:.1f}ms  "
+          f"tok p50={s['tok_p50_s'] * 1e3:.2f}ms "
+          f"p95={s['tok_p95_s'] * 1e3:.2f}ms")
+    print(f"  decode_steps={s['decode_steps']} prefills={s['prefills']} "
+          f"occupancy={s['occupancy']:.2f} "
+          f"slot_balance={s['slot_balance']:.2f}")
+    return report
 
 
 if __name__ == "__main__":

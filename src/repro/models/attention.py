@@ -150,15 +150,17 @@ def chunked_attention(q, k, v, *, causal: bool, window: int = 0,
 # ------------------------------------------------------------------ decode
 def decode_attention_simple(q, k_cache, v_cache, cache_len) -> jnp.ndarray:
     """One-token decode against a full cache. q:(B,1,Hq,D),
-    caches:(B,Smax,Hkv,D); positions >= cache_len are masked."""
+    caches:(B,Smax,Hkv,D); positions >= cache_len are masked. cache_len is
+    a scalar (lockstep batch) or a (B,) vector (continuous batching: each
+    slot carries its own valid length)."""
     B, _, Hq, D = q.shape
     _, Sk, Hkv, _ = k_cache.shape
     g = Hq // Hkv
     qg = q.reshape(B, Hkv, g, D)
     s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache) / np.sqrt(D)
     s = s.astype(jnp.float32)
-    valid = jnp.arange(Sk) < cache_len
-    s = jnp.where(valid[None, None, None], s, -1e30)
+    valid = jnp.arange(Sk)[None, :] < jnp.reshape(cache_len, (-1, 1))
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
     w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
     o = jnp.einsum("bhgk,bkhd->bhgd", w, v_cache)
     return o.reshape(B, 1, Hq, D)

@@ -124,16 +124,18 @@ def build(cfg: ModelConfig, rt: Runtime, param_dtype=jnp.bfloat16) -> Model:
 
     # ----------------------------------------------------------- decode
     def decode_step(params, caches, token, pos):
-        """token: (B,1) i32; pos: scalar i32 (next position to write)."""
+        """token: (B,1) i32; pos: scalar i32 (next position to write) or a
+        (B,) vector of per-row positions (continuous batching)."""
         x = embed_tokens(params["embed"], token).astype(compute_dtype)
         if cfg.rope == "sinusoidal":
             # closed-form sinusoidal position embedding at runtime `pos`
             d = cfg.d_model
             half_idx = jnp.arange(0, d, 2)
-            ang = pos / jnp.power(10000.0, half_idx / d)
-            pe = jnp.zeros((d,), jnp.float32)
-            pe = pe.at[0::2].set(jnp.sin(ang)).at[1::2].set(jnp.cos(ang))
-            x = x + pe.astype(x.dtype)
+            pos_v = jnp.atleast_1d(jnp.asarray(pos, jnp.float32))
+            ang = pos_v[:, None] / jnp.power(10000.0, half_idx / d)
+            pe = jnp.zeros((pos_v.shape[0], d), jnp.float32)
+            pe = pe.at[:, 0::2].set(jnp.sin(ang)).at[:, 1::2].set(jnp.cos(ang))
+            x = x + pe[:, None].astype(x.dtype)
         cross = caches.get("cross")
         x, new_layer_caches = tfm.stack_decode(
             params["layers"], x, caches["layers"], pos, cfg, rt,

@@ -308,8 +308,15 @@ def cache_init(cfg: ModelConfig, num_layers: int, batch: int, max_len: int,
 def layer_decode(p, x, cache, pos, cfg: ModelConfig, rt: Runtime,
                  cross_cache=None):
     """Single-token step. x: (B,1,d); cache: this layer's entry (no L axis).
-    Returns (x, new_cache)."""
+    Returns (x, new_cache).
+
+    pos is a scalar (lockstep batch: every row writes the same cache slot)
+    or a (B,) vector (continuous batching: each row carries its own
+    position, writes its own slot, and masks its own valid cache length).
+    """
     new_cache = dict(cache)
+    pos = jnp.asarray(pos)
+    per_row = pos.ndim > 0
     if cfg.family == "ssm":
         h_in = apply_norm(p["norm1"], x, cfg.norm)
         B, _, d = x.shape
@@ -352,13 +359,20 @@ def layer_decode(p, x, cache, pos, cfg: ModelConfig, rt: Runtime,
 
     h_in = apply_norm(p["norm1"], x, cfg.norm)
     q, k, v = attn_mod.project_qkv(p["attn"], h_in, h_in, cfg)
-    pos_b = jnp.full((x.shape[0], 1), pos)
+    pos_b = jnp.broadcast_to(pos.reshape(-1, 1), (x.shape[0], 1))
     q, k = _rope_q_k(cfg, q, k, pos_b if cfg.rope != "mrope" else
                      jnp.broadcast_to(pos_b[:, None], (x.shape[0], 3, 1)))
     span = cache["k"].shape[1]
     slot = pos % span if cfg.attention_kind == "sliding" else pos
-    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    if per_row:
+        bidx = jnp.arange(x.shape[0])
+        k_cache = cache["k"].at[bidx, slot].set(k[:, 0])
+        v_cache = cache["v"].at[bidx, slot].set(v[:, 0])
+    else:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot,
+                                                      axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot,
+                                                      axis=1)
     cache_len = jnp.minimum(pos + 1, span)
     if rt.decode_partitioned and cfg.attention_kind == "full":
         from repro.parallel.collectives import partitioned_decode_attention

@@ -34,12 +34,15 @@ def partitioned_decode_attention(q, k_cache, v_cache, cache_len,
                                  *, seq_axis: str = "model",
                                  batch_axes=("data",)):
     """q:(B,1,Hq,D); k_cache/v_cache:(B,S,Hkv,D) with S sharded over
-    seq_axis and B over batch_axes; cache_len: scalar valid length."""
+    seq_axis and B over batch_axes; cache_len: scalar valid length, or a
+    (B,) vector of per-row lengths (continuous batching)."""
     B, _, Hq, D = q.shape
     S = k_cache.shape[1]
     Hkv = k_cache.shape[2]
     g = Hq // Hkv
     bspec = batch_axes if batch_axes else None
+    per_row = jnp.ndim(cache_len) > 0
+    len_spec = P(bspec) if per_row else P()
 
     def local(q, k, v, cache_len):
         nshard = axis_size(seq_axis)
@@ -49,7 +52,8 @@ def partitioned_decode_attention(q, k_cache, v_cache, cache_len,
         s = jnp.einsum("bhgd,bkhd->bhgk", qg, k) / np.sqrt(D)
         s = s.astype(jnp.float32)
         gpos = idx * s_loc + jnp.arange(s_loc)
-        s = jnp.where((gpos < cache_len)[None, None, None], s, -1e30)
+        mask = gpos[None, :] < jnp.reshape(cache_len, (-1, 1))
+        s = jnp.where(mask[:, None, None, :], s, -1e30)
         m_loc = s.max(-1)                                     # (b,h,g)
         p = jnp.exp(s - m_loc[..., None])
         l_loc = p.sum(-1)
@@ -65,7 +69,7 @@ def partitioned_decode_attention(q, k_cache, v_cache, cache_len,
     return _shard_map(
         local,
         in_specs=(P(bspec, None, None, None), P(bspec, seq_axis, None, None),
-                  P(bspec, seq_axis, None, None), P()),
+                  P(bspec, seq_axis, None, None), len_spec),
         out_specs=P(bspec, None, None, None),
     )(q, k_cache, v_cache, cache_len)
 

@@ -1,10 +1,17 @@
 """Batched serving loop: prefill once, decode tokens with a jitted step.
 
-Serves synchronous batches (the paper's Tier-2 deployment axis is batch
-size, so the loop exposes it directly); returns tokens + tokens/s.
+This is the *lockstep special case* of the request-level schedulers in
+:mod:`repro.serving` — one synchronous batch, every row decodes the same
+number of tokens. Request-level serving (continuous batching, per-request
+TTFT/latency metrics, EOS termination) lives in ``repro.serving``;
+``generate`` is kept as the thin throughput-oriented convenience API
+(callables + one batch dict in, tokens out — no Request plumbing) and as
+the back-compat surface for pre-jitted ``(params, batch)`` prefill
+closures.
 """
 from __future__ import annotations
 
+import inspect
 import time
 from dataclasses import dataclass
 from typing import Callable, Optional
@@ -13,6 +20,27 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
+
+from repro.serving.engine import decode_lockstep
+
+
+def _accepts_cache_span(prefill: Callable) -> bool:
+    """Whether ``prefill`` takes the 3-arg ``(params, batch, cache_span)``
+    contract (dispatch by signature — a try/except on TypeError would
+    swallow real TypeErrors raised *inside* a 3-arg prefill and run it
+    twice). ``jax.jit`` wrappers expose the wrapped signature."""
+    try:
+        sig = inspect.signature(prefill)
+    except (TypeError, ValueError):
+        return True              # uninspectable: assume the new contract
+    n_pos = 0
+    for p in sig.parameters.values():
+        if p.kind == inspect.Parameter.VAR_POSITIONAL:
+            return True
+        if p.kind in (inspect.Parameter.POSITIONAL_ONLY,
+                      inspect.Parameter.POSITIONAL_OR_KEYWORD):
+            n_pos += 1
+    return n_pos >= 3
 
 
 @dataclass
@@ -27,28 +55,36 @@ def generate(prefill: Callable, decode_step: Callable, params, batch: dict,
              *, prompt_len: int, max_new_tokens: int,
              cache_span: Optional[int] = None,
              greedy: bool = True, seed: int = 0) -> ServeResult:
+    """Prefill ``batch`` then decode ``max_new_tokens`` lockstep tokens.
+
+    ``prefill(params, batch, cache_span)`` sizes the decode cache
+    (callables with the legacy two-arg ``(params, batch)`` signature —
+    e.g. a jitted closure that already baked the span in — still work).
+    Sampling (``greedy=False``) applies to *every* token including the
+    first, and tokens accumulate on device with a single host transfer
+    after the loop, so decode dispatch is never serialized on a per-token
+    ``np.asarray`` sync.
+    """
     span = cache_span or (prompt_len + max_new_tokens)
     t0 = time.perf_counter()
-    logits, caches = prefill(params, batch)
+    if _accepts_cache_span(prefill):
+        logits, caches = prefill(params, batch, span)
+    else:                        # legacy prefill(params, batch) closure
+        logits, caches = prefill(params, batch)
     logits = jax.block_until_ready(logits)
     prefill_s = time.perf_counter() - t0
     B = logits.shape[0]
-    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-    out = [np.asarray(tok)]
     key = jax.random.PRNGKey(seed)
+    if greedy:
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    else:                        # the first token is sampled like the rest
+        key, sub = jax.random.split(key)
+        tok = jax.random.categorical(sub, logits[:, -1:]).astype(jnp.int32)
     t0 = time.perf_counter()
-    for i in range(max_new_tokens - 1):
-        logits, caches = decode_step(params, caches, tok,
-                                     jnp.int32(prompt_len + i))
-        if greedy:
-            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        else:
-            key, sub = jax.random.split(key)
-            tok = jax.random.categorical(sub, logits).astype(jnp.int32)
-        out.append(np.asarray(tok))
-    jax.block_until_ready(tok)
+    toks, caches, _ = decode_lockstep(
+        decode_step, params, caches, tok, start_pos=prompt_len,
+        steps=max_new_tokens - 1, greedy=greedy, key=key)
     decode_s = time.perf_counter() - t0
-    toks = np.concatenate(out, axis=1)
     return ServeResult(tokens=toks, prefill_s=prefill_s, decode_s=decode_s,
                        tokens_per_s=B * max_new_tokens / max(
                            prefill_s + decode_s, 1e-9))

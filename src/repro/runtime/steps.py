@@ -120,6 +120,22 @@ def build_prefill_step(rcfg: RunConfig):
     return prefill_step, model
 
 
+def build_serve_steps(rcfg: RunConfig):
+    """The serving-engine triple: ``(prefill_fn, decode_fn, model)``.
+
+    ``prefill_fn(params, batch, cache_span)`` and
+    ``decode_fn(params, caches, token, pos)`` are the *raw* (unjitted)
+    model callables — the engines in :mod:`repro.serving` own jit
+    (static ``cache_span``, fused sampling, buffer donation). ``decode_fn``
+    accepts per-row ``pos`` vectors, which is what slot-based continuous
+    batching schedules on. ``model`` (the prefill-side build) provides
+    ``init_params`` and ``cache_init`` for the slot pool.
+    """
+    _, model = build_prefill_step(rcfg)
+    _, dmodel = build_decode_step(rcfg)
+    return model.prefill, dmodel.decode_step, model
+
+
 def build_decode_step(rcfg: RunConfig):
     import dataclasses as _dc
     part = (rcfg.decode_attention == "partitioned"

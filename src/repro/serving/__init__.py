@@ -1,0 +1,27 @@
+"""repro.serving — request-level serving: schedulers, slots, metrics.
+
+The Tier-2 deployment subsystem: :class:`Request` streams in,
+:class:`StaticEngine` (lockstep batches) or :class:`ContinuousEngine`
+(slot-based continuous batching) schedules them onto the jitted
+prefill/decode steps, and :class:`ServeReport` carries the measured
+TTFT / per-token latency / goodput / slot-occupancy out to the
+benchmarks.
+"""
+from repro.serving.engine import (SCHEDULERS, ContinuousEngine,
+                                  StaticEngine, decode_lockstep,
+                                  make_engine)
+from repro.serving.request import (Request, RequestMetrics, ServeReport,
+                                   SimClock, WallClock)
+
+__all__ = [
+    "SCHEDULERS",
+    "ContinuousEngine",
+    "StaticEngine",
+    "decode_lockstep",
+    "make_engine",
+    "Request",
+    "RequestMetrics",
+    "ServeReport",
+    "SimClock",
+    "WallClock",
+]

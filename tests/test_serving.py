@@ -1,0 +1,389 @@
+"""Request-level serving: the repro.serving schedulers, the decode-loop
+bugfix regressions (first-token sampling, cache_span, per-token host
+sync, warmup blocking), per-slot position correctness, EOS/budget
+termination, slot reuse, and static-vs-continuous goodput ordering."""
+import numpy
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, MeshConfig, RunConfig, ShapeConfig, reduced
+from repro.core import scalability
+from repro.data.pipeline import poisson_arrivals, synth_requests
+from repro.runtime import serve_loop
+from repro.runtime.serve_loop import generate
+from repro.runtime.steps import build_serve_steps
+from repro.serving import (ContinuousEngine, Request, SimClock,
+                           StaticEngine, engine as engine_mod, make_engine)
+
+VOCAB = 17
+SPAN = 16
+
+
+# ------------------------------------------------------- stub model pieces
+def stub_prefill(params, batch, cache_span):
+    """Flat logits except a spike at token 1; caches with batch axis 1."""
+    B = batch["tokens"].shape[0]
+    logits = jnp.zeros((B, 1, VOCAB)).at[:, :, 1].set(100.0)
+    return logits, {"k": jnp.zeros((1, B, cache_span, 2))}
+
+
+def stub_decode(params, caches, tok, pos):
+    """Deterministic next token = pos + 1 (clipped into the vocab).
+    Handles both a scalar pos (lockstep) and a (B,) vector (continuous)."""
+    pos_v = jnp.broadcast_to(jnp.atleast_1d(pos), (tok.shape[0],))
+    lg = jax.nn.one_hot(jnp.minimum(pos_v + 1, VOCAB - 1), VOCAB) * 100.0
+    return lg[:, None, :], caches
+
+
+def stub_cache_init(batch, max_len, dtype=jnp.float32):
+    return {"k": jnp.zeros((1, batch, max_len, 2), dtype)}
+
+
+def _flat_prefill(params, batch, cache_span):
+    """All-zero logits: argmax is 0, sampling is seed-dependent."""
+    B = batch["tokens"].shape[0]
+    return jnp.zeros((B, 1, VOCAB)), {"k": jnp.zeros((1, B, cache_span, 2))}
+
+
+def _flat_decode(params, caches, tok, pos):
+    B = tok.shape[0]
+    return jnp.zeros((B, 1, VOCAB)), caches
+
+
+def _stub_requests(n, prompt_len=4, budgets=(6,)):
+    return [Request(rid=i, prompt=np.full(prompt_len, 2, np.int32),
+                    max_new_tokens=budgets[i % len(budgets)])
+            for i in range(n)]
+
+
+# ------------------------------------------- bugfix regressions: generate
+def test_generate_first_token_sampled():
+    """greedy=False must sample the FIRST token too (it used to be argmax
+    from the prefill logits regardless of the seed)."""
+    seed = 123
+    batch = {"tokens": jnp.zeros((4, 4), jnp.int32)}
+    # legacy 2-arg prefill so this test runs (and fails) on pre-fix code
+    res = generate(lambda p, b: _flat_prefill(p, b, SPAN), _flat_decode,
+                   None, batch,
+                   prompt_len=4, max_new_tokens=3, greedy=False, seed=seed)
+    # mirror the documented key schedule: first split samples token 0
+    key = jax.random.PRNGKey(seed)
+    _, sub = jax.random.split(key)
+    expect = np.asarray(
+        jax.random.categorical(sub, jnp.zeros((4, 1, VOCAB))))[:, 0]
+    np.testing.assert_array_equal(res.tokens[:, 0], expect)
+    # flat logits: argmax would be identically 0; sampling must not be
+    assert res.tokens[:, 0].any(), "first token still argmax'd"
+
+
+def test_generate_greedy_unchanged():
+    batch = {"tokens": jnp.zeros((2, 4), jnp.int32)}
+    res = generate(stub_prefill, stub_decode, None, batch,
+                   prompt_len=4, max_new_tokens=4, greedy=True)
+    np.testing.assert_array_equal(res.tokens[:, 0], [1, 1])
+    # stub decode emits pos+1: positions 4,5,6 -> tokens 5,6,7
+    np.testing.assert_array_equal(res.tokens[0], [1, 5, 6, 7])
+
+
+def test_generate_honors_cache_span():
+    """The cache_span argument must reach prefill (the old loop computed
+    `span` and dropped it on the floor)."""
+    seen = {}
+
+    def recording_prefill(params, batch, cache_span):
+        seen["span"] = cache_span
+        return stub_prefill(params, batch, cache_span)
+
+    batch = {"tokens": jnp.zeros((2, 4), jnp.int32)}
+    generate(recording_prefill, stub_decode, None, batch,
+             prompt_len=4, max_new_tokens=2, cache_span=99)
+    assert seen["span"] == 99
+    generate(recording_prefill, stub_decode, None, batch,
+             prompt_len=4, max_new_tokens=2)        # default: prompt+new
+    assert seen["span"] == 6
+
+
+def test_generate_legacy_prefill_signature():
+    """Pre-jitted (params, batch) closures keep working."""
+
+    def legacy_prefill(params, batch):
+        return stub_prefill(params, batch, SPAN)
+
+    batch = {"tokens": jnp.zeros((2, 4), jnp.int32)}
+    res = generate(legacy_prefill, stub_decode, None, batch,
+                   prompt_len=4, max_new_tokens=3)
+    assert res.tokens.shape == (2, 3)
+
+
+class _CountingNp:
+    """numpy facade counting asarray calls (host-transfer sites)."""
+
+    def __init__(self):
+        self.asarray_calls = 0
+
+    def __getattr__(self, name):
+        return getattr(numpy, name)
+
+    def asarray(self, *a, **kw):
+        self.asarray_calls += 1
+        return numpy.asarray(*a, **kw)
+
+
+def test_generate_single_host_transfer(monkeypatch):
+    """Tokens accumulate on device: ONE host transfer after the loop, not
+    one blocking np.asarray per decoded token."""
+    fake = _CountingNp()
+    monkeypatch.setattr(serve_loop, "np", fake)
+    monkeypatch.setattr(engine_mod, "np", fake)
+    batch = {"tokens": jnp.zeros((2, 4), jnp.int32)}
+    # legacy 2-arg prefill so this test runs (and fails) on pre-fix code
+    res = generate(lambda p, b: stub_prefill(p, b, SPAN), stub_decode,
+                   None, batch,
+                   prompt_len=4, max_new_tokens=8)
+    assert res.tokens.shape == (2, 8)
+    assert fake.asarray_calls == 1, \
+        f"{fake.asarray_calls} host transfers for 8 tokens"
+
+
+# ------------------------------------- bugfix regression: measure_step
+def test_measure_step_blocks_each_warmup(monkeypatch):
+    """Every warmup call must be blocked (not just the last), otherwise
+    queued warmup work leaks into the first timed iteration."""
+    calls = []
+    real = jax.block_until_ready
+
+    def spy(x):
+        calls.append(1)
+        return real(x)
+
+    monkeypatch.setattr(jax, "block_until_ready", spy)
+    scalability.measure_step(lambda: jnp.zeros(3), (), iters=3, warmup=2)
+    assert len(calls) == 2 + 3, f"blocked {len(calls)}x, want warmup+iters"
+
+
+# ---------------------------------------------------- synthetic arrivals
+def test_poisson_arrivals():
+    a = poisson_arrivals(16, rate_per_s=8.0, seed=3)
+    b = poisson_arrivals(16, rate_per_s=8.0, seed=3)
+    np.testing.assert_array_equal(a, b)
+    assert (np.diff(a) > 0).all() and a[0] > 0
+    assert 0.5 < a[-1] < 8.0            # 16 arrivals at 8/s ~ 2s
+    np.testing.assert_array_equal(poisson_arrivals(4, 0.0), np.zeros(4))
+
+
+def test_synth_requests():
+    cfg = reduced(ARCHS["granite-3-8b"])
+    reqs = synth_requests(cfg, 6, 8, max_new_tokens=(2, 16), rate_per_s=4.0,
+                          seed=1)
+    assert [r.max_new_tokens for r in reqs] == [2, 16, 2, 16, 2, 16]
+    assert all(r.prompt.shape == (8,) for r in reqs)
+    assert all(r.prompt.min() >= 1 for r in reqs)   # 0 is reserved for EOS
+    reqs2 = synth_requests(cfg, 6, 8, max_new_tokens=(2, 16),
+                           rate_per_s=4.0, seed=1)
+    np.testing.assert_array_equal(reqs[3].prompt, reqs2[3].prompt)
+    assert reqs[3].arrival_s == reqs2[3].arrival_s
+
+
+# --------------------------------------------------- continuous scheduler
+def test_eos_and_budget_termination():
+    """stub decode emits pos+1, so with eos_id=7 a request prefilled at
+    length 4 stops after [1, 5, 6, 7]; a 2-token budget stops at [1, 5]."""
+    eng = ContinuousEngine(stub_prefill, stub_decode, None, stub_cache_init,
+                           slots=2, cache_span=SPAN, eos_id=7,
+                           clock=SimClock())
+    r = eng.run([Request(0, np.full(4, 2, np.int32), max_new_tokens=10),
+                 Request(1, np.full(4, 2, np.int32), max_new_tokens=2)])
+    m0, m1 = r.metrics
+    assert m0.finished and m0.new_tokens == 4
+    np.testing.assert_array_equal(m0.tokens, [1, 5, 6, 7])
+    assert m1.finished and m1.new_tokens == 2
+    np.testing.assert_array_equal(m1.tokens, [1, 5])
+    assert r.completed == 2
+
+
+def test_single_token_budget_finishes_at_admission():
+    eng = ContinuousEngine(stub_prefill, stub_decode, None, stub_cache_init,
+                           slots=1, cache_span=SPAN, clock=SimClock())
+    r = eng.run(_stub_requests(2, budgets=(1,)))
+    assert r.completed == 2 and r.decode_steps == 0
+    for m in r.metrics:
+        np.testing.assert_array_equal(m.tokens, [1])
+
+
+def test_slot_reuse_under_continuous_batching():
+    """5 requests through 2 slots: every request completes, freed slots
+    are re-admitted mid-stream, and per-request token streams stay
+    position-correct after reuse."""
+    eng = ContinuousEngine(stub_prefill, stub_decode, None, stub_cache_init,
+                           slots=2, cache_span=SPAN, clock=SimClock())
+    reqs = _stub_requests(5, budgets=(4,))
+    r = eng.run(reqs)
+    assert r.completed == 5
+    assert r.prefills == 5
+    assert all(s >= 2 for s in r.slot_tokens)       # both slots reused
+    assert sum(r.slot_tokens) == r.total_new_tokens == 5 * 4
+    for m in r.metrics:                             # pos-derived stream
+        np.testing.assert_array_equal(m.tokens, [1, 5, 6, 7])
+    # 2 slots x 4-token budgets, 5 requests: ceil(5/2)*3 lockstep waves
+    assert r.decode_steps == 9
+    assert r.scheduler == "continuous"
+
+
+def test_continuous_admits_by_arrival_time():
+    """A request that hasn't arrived can't be admitted even if a slot is
+    free; the pool idles forward to the next arrival."""
+    clock = SimClock(prefill_cost_s=1.0, decode_cost_s=1.0)
+    eng = ContinuousEngine(stub_prefill, stub_decode, None, stub_cache_init,
+                           slots=2, cache_span=SPAN, clock=clock)
+    reqs = [Request(0, np.full(4, 2, np.int32), 3, arrival_s=0.0),
+            Request(1, np.full(4, 2, np.int32), 3, arrival_s=50.0)]
+    r = eng.run(reqs)
+    m1 = r.metrics[1]
+    assert m1.admitted_s >= 50.0
+    assert m1.ttft_s == pytest.approx(m1.first_token_s - 50.0)
+    assert r.completed == 2
+
+
+# ------------------------------------------------------ static scheduler
+def test_static_lockstep_batches():
+    eng = StaticEngine(stub_prefill, stub_decode, None, stub_cache_init,
+                       slots=2, cache_span=SPAN, clock=SimClock())
+    r = eng.run(_stub_requests(4, budgets=(2, 6)))
+    assert r.completed == 4
+    assert r.prefills == 2                  # two lockstep chunks
+    assert r.decode_steps == 2 * 5          # each chunk runs to max budget
+    for m in r.metrics:                     # budgets trimmed per request
+        assert m.new_tokens == (2 if m.rid % 2 == 0 else 6)
+    # short requests ride along: occupancy strictly below 1
+    assert r.occupancy < 1.0
+
+
+def test_static_rejects_mixed_prompt_lengths():
+    eng = StaticEngine(stub_prefill, stub_decode, None, stub_cache_init,
+                       slots=2, cache_span=SPAN, clock=SimClock())
+    reqs = [Request(0, np.full(4, 2, np.int32), 2),
+            Request(1, np.full(6, 2, np.int32), 2)]
+    with pytest.raises(ValueError, match="equal prompt lengths"):
+        eng.run(reqs)
+
+
+def test_static_vs_continuous_goodput_ordering():
+    """Deterministic SimClock comparison on a mixed-budget burst: the
+    continuous scheduler backfills freed slots and must record strictly
+    higher goodput than the lockstep static scheduler."""
+    results = {}
+    for sched in ("static", "continuous"):
+        eng = make_engine(sched, stub_prefill, stub_decode, None,
+                          stub_cache_init, slots=2, cache_span=SPAN,
+                          clock=SimClock(prefill_cost_s=2.0,
+                                         decode_cost_s=1.0))
+        results[sched] = eng.run(_stub_requests(6, budgets=(2, 12)))
+    st, ct = results["static"], results["continuous"]
+    assert st.completed == ct.completed == 6
+    assert ct.decode_steps < st.decode_steps
+    assert ct.goodput_rps > st.goodput_rps
+    assert ct.occupancy > st.occupancy
+
+
+def test_engine_validates_requests():
+    eng = ContinuousEngine(stub_prefill, stub_decode, None, stub_cache_init,
+                           slots=1, cache_span=8, clock=SimClock())
+    with pytest.raises(ValueError, match="exceeds cache_span"):
+        eng.run([Request(0, np.full(4, 2, np.int32), max_new_tokens=5)])
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.run([Request(0, np.full(4, 2, np.int32), max_new_tokens=0)])
+    with pytest.raises(ValueError, match="unknown scheduler"):
+        make_engine("fifo", stub_prefill, stub_decode, None,
+                    stub_cache_init, slots=1, cache_span=8)
+
+
+# --------------------------------------------- real-model slot decoding
+def _tiny_serve(arch="granite-3-8b", span=24, slots=2):
+    cfg = reduced(ARCHS[arch], layers=2, d_model=64, vocab=128, d_ff=128)
+    rcfg = RunConfig(model=cfg, shape=ShapeConfig("s", "decode", span, slots),
+                     mesh=MeshConfig(shape=(1, 1), axes=("data", "model")),
+                     attention_backend="dense", param_dtype="float32",
+                     decode_attention="simple")
+    prefill_fn, decode_fn, model = build_serve_steps(rcfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, prefill_fn, decode_fn, model, params
+
+
+def _solo_greedy(prefill_fn, decode_fn, params, prompt, steps, span):
+    """Reference: one request decoded alone with scalar positions."""
+    logits, caches = prefill_fn(
+        params, {"tokens": jnp.asarray(prompt[None])}, span)
+    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    toks = [int(tok[0, 0])]
+    for i in range(steps - 1):
+        logits, caches = decode_fn(params, caches, tok,
+                                   jnp.int32(len(prompt) + i))
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        toks.append(int(tok[0, 0]))
+    return toks
+
+
+@pytest.mark.parametrize("arch", ["granite-3-8b", "rwkv6-3b"])
+def test_pool_decode_matches_solo(arch):
+    """Continuous batching is a scheduling change, not a numerics change:
+    requests with different prompt lengths decoded via per-slot vector
+    positions in a shared pool must emit exactly the tokens they emit
+    when decoded alone — including after slot reuse."""
+    span = 24
+    cfg, prefill_fn, decode_fn, model, params = _tiny_serve(arch, span=span)
+    rng = np.random.default_rng(0)
+    pA = rng.integers(1, cfg.vocab_size, size=5).astype(np.int32)
+    pB = rng.integers(1, cfg.vocab_size, size=9).astype(np.int32)
+    refA = _solo_greedy(prefill_fn, decode_fn, params, pA, 5, span)
+    refB = _solo_greedy(prefill_fn, decode_fn, params, pB, 5, span)
+
+    eng = ContinuousEngine(prefill_fn, decode_fn, params, model.cache_init,
+                           slots=2, cache_span=span, clock=SimClock())
+    rep = eng.run([Request(0, pA, 5), Request(1, pB, 5),
+                   Request(2, pA, 5)])          # rid 2 reuses a slot
+    assert [list(m.tokens) for m in rep.metrics] == [refA, refB, refA]
+
+
+def test_vector_pos_matches_scalar_pos():
+    """decode_step with a (B,) pos vector of equal entries must equal the
+    scalar-pos decode (same caches, same tokens)."""
+    span = 16
+    cfg, prefill_fn, decode_fn, model, params = _tiny_serve(span=span)
+    batch = {"tokens": jnp.asarray(
+        np.random.default_rng(1).integers(1, 128, (3, 6)), jnp.int32)}
+    logits, caches = prefill_fn(params, batch, span)
+    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    l_s, c_s = decode_fn(params, caches, tok, jnp.int32(6))
+    l_v, c_v = decode_fn(params, caches, tok, jnp.full((3,), 6, jnp.int32))
+    np.testing.assert_allclose(np.asarray(l_v), np.asarray(l_s), atol=1e-5)
+    for a, b in zip(jax.tree.leaves(c_s), jax.tree.leaves(c_v)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+# ----------------------------------------------------------- report math
+def test_report_summary_fields():
+    eng = ContinuousEngine(stub_prefill, stub_decode, None, stub_cache_init,
+                           slots=2, cache_span=SPAN,
+                           clock=SimClock(prefill_cost_s=2.0,
+                                          decode_cost_s=1.0))
+    r = eng.run(_stub_requests(4, budgets=(3,)))
+    s = r.summary()
+    assert s["completed"] == 4 and s["scheduler"] == "continuous"
+    assert s["goodput_rps"] == pytest.approx(4 / r.makespan_s)
+    assert 0.0 < s["occupancy"] <= 1.0
+    assert 0.0 <= s["slot_balance"] <= 1.0
+    assert s["tok_p50_s"] == pytest.approx(1.0)     # SimClock decode cost
+    assert s["ttft_p50_s"] >= 2.0                   # at least one prefill
+
+
+def test_slot_load_balance_metric():
+    from repro.core.metrics import slot_load_balance
+
+    assert slot_load_balance([8, 8, 8]) == pytest.approx(1.0)
+    assert slot_load_balance([8, 8, 0]) == 0.0      # a starved slot
+    assert 0.0 < slot_load_balance([8, 4, 8]) < 1.0
+    assert slot_load_balance([]) == 1.0

@@ -73,8 +73,11 @@ def test_train_driver_end_to_end():
 def test_serve_driver_end_to_end():
     from repro.launch.serve import main
     res = main(["--arch", "hymba-1.5b", "--batch", "2", "--prompt-len", "16",
-                "--max-new-tokens", "4"])
-    assert res.tokens.shape == (2, 4)
+                "--max-new-tokens", "4", "--num-requests", "2",
+                "--scheduler", "continuous"])
+    assert res.completed == 2
+    assert all(m.new_tokens == 4 for m in res.metrics)
+    assert all(m.tokens.shape == (4,) for m in res.metrics)
 
 
 def test_train_driver_multidevice():
