@@ -8,10 +8,9 @@ stamps, and sinks the records."""
 from __future__ import annotations
 
 import dataclasses
-import time
 
 from repro.bench import (BENCH_MESH, BENCH_SHAPE, BenchRecord, Workload,
-                         scenario)
+                         scenario, timeit_us)
 from repro.configs import ARCHS, SHAPES
 
 COMPILE_MODES = ("O0", "O1", "O3")
@@ -30,14 +29,15 @@ def allocation_layers(wl: Workload):
 
     cfg = dataclasses.replace(ARCHS[wl.arch],
                               num_layers=wl.knobs["num_layers"])
-    t0 = time.perf_counter()
-    reps = {m: sections.analyze(cfg, wl.shape, wl.mesh, m)
-            for m in COMPILE_MODES}
-    us = (time.perf_counter() - t0) * 1e6
-    for m, rep in reps.items():
+    # per-mode timeit (not one shared single-shot split three ways): the
+    # per-iter samples let the compare gate's sign test veto jitter
+    for m in COMPILE_MODES:
+        rep = sections.analyze(cfg, wl.shape, wl.mesh, m)  # doubles as warmup
+        us = timeit_us(sections.analyze, cfg, wl.shape, wl.mesh, m,
+                       iters=5, warmup=0)
         yield BenchRecord(
             name=f"allocation/{wl.label}/{m}",
-            us_per_call=us / len(COMPILE_MODES),
+            us_per_call=us,
             knobs={"mode": m},
             derived={"alloc": round(rep.allocation, 4),
                      "n_sections": rep.n_sections})
@@ -59,9 +59,9 @@ def allocation_hidden(wl: Workload):
     cfg = dataclasses.replace(ARCHS[wl.arch], d_model=hs, d_ff=4 * hs,
                               num_heads=nq, num_kv_heads=max(1, nq // 4),
                               head_dim=128, num_layers=12)
-    t0 = time.perf_counter()
-    rep = sections.analyze(cfg, wl.shape, wl.mesh, "O3")
-    us = (time.perf_counter() - t0) * 1e6
+    rep = sections.analyze(cfg, wl.shape, wl.mesh, "O3")  # doubles as warmup
+    us = timeit_us(sections.analyze, cfg, wl.shape, wl.mesh, "O3",
+                   iters=5, warmup=0)
     yield BenchRecord(name=f"allocation/{wl.label}/O3", us_per_call=us,
                       knobs={"mode": "O3"},
                       derived={"alloc": round(rep.allocation, 4)})

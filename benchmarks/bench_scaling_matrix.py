@@ -1,0 +1,314 @@
+"""Measured multi-device scaling matrix (Tier-2, paper Fig. 11/Table III).
+
+Drives the real DP/TP (`parallel/sharding` + collectives) and GPipe
+(`parallel/pipeline`) paths on subprocess-simulated host meshes — one
+child process per device count, spawned with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` via
+``repro.launch.mesh.host_device_env`` (the parent must keep seeing one
+device; jax locks the count on first init). Each child prints raw
+per-iteration step times as JSON; the parent turns them into
+:class:`BenchRecord` rows carrying:
+
+* ``efficiency``       — throughput vs the 1-device run of the *same*
+  global problem (`core/scalability.scaling_efficiency`; ideal = 1.0 on a
+  shared-core simulated mesh, the deficit is partition overhead);
+* ``collective_frac``  — upper-bound fraction of the step spent in
+  collectives/partitioning (`collective_time_fraction`);
+* ``shard_balance``    — Eq. 3 over per-shard work units (batch rows for
+  DP, attention heads for TP; a starved shard pins it to 0);
+* PP rows additionally check the paper's "throughput = most-loaded
+  stage" model: ``model_ratio`` is measured/predicted step time with the
+  per-layer time calibrated on the balanced split, plus Eq. 2/3 stage
+  metrics (`pipeline_allocation`, `pp_stage_balance`).
+
+Selection: ``python -m benchmarks.run --only scaling_matrix`` (or an
+exact scenario name such as ``scaling_matrix/pp``).
+"""
+from __future__ import annotations
+
+import functools
+import json
+import statistics
+from typing import Dict, List, Tuple
+
+from repro.bench import BenchRecord, Workload, scenario
+from repro.bench.runner import TimingStats, run_with_devices
+
+ARCH = "granite-3-8b"
+B, S = 8, 64  # global batch x seq, identical across every split
+DEVICE_COUNTS = (1, 2, 4, 8)
+# device count -> (data, model) splits measured inside that child process
+SPLITS: Dict[int, Tuple[Tuple[int, int], ...]] = {
+    1: ((1, 1),),
+    2: ((2, 1), (1, 2)),
+    4: ((4, 1), (1, 4)),
+    8: ((8, 1), (1, 8), (4, 2), (2, 4)),
+}
+PP_STAGE_SPLITS = ((2, 2, 2, 2), (1, 2, 2, 3), (1, 1, 1, 5))
+PP_M, PP_MB, PP_SEQ, PP_D, PP_L = 8, 2, 32, 128, 8
+
+_PREAMBLE = r"""
+import json, time
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding
+from repro.configs import ARCHS, MeshConfig, RunConfig, ShapeConfig, reduced
+from repro.launch.mesh import make_mesh, set_mesh
+
+cfg = reduced(ARCHS["granite-3-8b"], layers=2, d_model=128, d_ff=256,
+              vocab=512)
+B, S = 8, 64
+
+
+def timed_samples(fn, args, iters=5, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    out = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        out.append(time.perf_counter() - t0)
+    return out
+"""
+
+_SPLIT_BODY = r"""
+from repro.models.frontends import synth_batch
+from repro.parallel import sharding as shd
+from repro.runtime.steps import build_train_step
+
+
+def step_samples(mesh_shape):
+    mesh_cfg = MeshConfig(shape=mesh_shape, axes=("data", "model"))
+    rcfg = RunConfig(model=cfg, shape=ShapeConfig("t", "train", S, B),
+                     mesh=mesh_cfg, param_dtype="float32",
+                     attention_backend="dense", exec_mode="resident")
+    mesh = make_mesh(mesh_cfg)
+    with set_mesh(mesh):
+        step, model, opt = build_train_step(rcfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        pspecs = shd.param_pspecs(params, cfg, rcfg)
+        params = jax.tree.map(
+            lambda x, sp: jax.device_put(x, NamedSharding(mesh, sp)),
+            params, pspecs, is_leaf=lambda x: not isinstance(x, dict))
+        opt_state = opt.init(params)
+        batch = synth_batch(cfg, B, S, kind="train")
+        return timed_samples(jax.jit(step), (params, opt_state, batch))
+
+
+for shape in SPLITS:
+    name = "x".join(map(str, shape))
+    print(json.dumps({"split": name, "samples_s": step_samples(shape)}))
+print(json.dumps({"meta": {"heads": cfg.num_heads,
+                           "kv_heads": cfg.num_kv_heads,
+                           "batch": B, "seq": S}}))
+"""
+
+_PP_BODY = r"""
+from repro.parallel.pipeline import pipeline_forward, stack_stages
+
+L, D, M, MB, SS = {pp_dims}
+mesh = make_mesh(MeshConfig(shape=(4,), axes=("model",)))
+params = {{"w1": jax.random.normal(jax.random.PRNGKey(0), (L, D, D)) * 0.05,
+           "w2": jax.random.normal(jax.random.PRNGKey(1), (L, D, D)) * 0.05}}
+x = jax.random.normal(jax.random.PRNGKey(2), (M, MB, SS, D))
+
+
+def layer_fn(c, p):
+    return c + jnp.tanh(c @ p["w1"]) @ p["w2"]
+
+
+for stage_layers in {pp_splits}:
+    staged, mask = stack_stages(params, stage_layers)
+    with set_mesh(mesh):
+        fn = jax.jit(
+            lambda st, m, xx: pipeline_forward(st, m, xx, layer_fn))
+        samples = timed_samples(fn, (staged, mask, x))
+    print(json.dumps({{"split": "-".join(map(str, stage_layers)),
+                       "samples_s": samples}}))
+"""
+
+
+def _parse_json_lines(stdout: str) -> List[dict]:
+    out = []
+    for line in stdout.splitlines():
+        line = line.strip()
+        if line.startswith("{"):
+            out.append(json.loads(line))
+    return out
+
+
+@functools.lru_cache(maxsize=None)
+def _mesh_results(n_devices: int) -> Dict[str, dict]:
+    """split-name -> {"samples_s": [...]} measured in one n-device child
+    (plus a "meta" entry). Cached so DP/TP/mixed scenarios share the four
+    child processes instead of re-spawning per axis."""
+    code = (
+        _PREAMBLE
+        + f"\nSPLITS = {SPLITS[n_devices]!r}\n"
+        + _SPLIT_BODY
+    )
+    results: Dict[str, dict] = {}
+    for rec in _parse_json_lines(
+        run_with_devices(code, n_devices=n_devices, timeout=900)
+    ):
+        if "meta" in rec:
+            results["meta"] = rec["meta"]
+        else:
+            results[rec["split"]] = rec
+    return results
+
+
+@functools.lru_cache(maxsize=1)
+def _pp_results() -> Dict[str, dict]:
+    code = _PREAMBLE + _PP_BODY.format(
+        pp_dims=(PP_L, PP_D, PP_M, PP_MB, PP_SEQ),
+        pp_splits=tuple(PP_STAGE_SPLITS),
+    )
+    return {
+        rec["split"]: rec
+        for rec in _parse_json_lines(
+            run_with_devices(code, n_devices=4, timeout=900)
+        )
+    }
+
+
+def _median_s(samples_s: List[float]) -> float:
+    return float(statistics.median(samples_s))
+
+
+def _split_record(
+    kind: str, shape: Tuple[int, int], n_devices: int
+) -> BenchRecord:
+    """One DP/TP/mixed record: measured split vs the 1-device baseline."""
+    from repro.core.scalability import (
+        collective_time_fraction,
+        even_shard_sizes,
+        scaling_efficiency,
+        shard_balance,
+    )
+
+    res = _mesh_results(n_devices)
+    base = _mesh_results(1)
+    split = "x".join(map(str, shape))
+    samples_us = [t * 1e6 for t in res[split]["samples_s"]]
+    t_n = _median_s(res[split]["samples_s"])
+    t_1 = _median_s(base["1x1"]["samples_s"])
+    tokens = B * S
+    dp, tp = shape
+    heads = res.get("meta", {}).get("heads", 4)
+    # analytic partition balance: batch rows over DP replicas and
+    # attention heads over TP shards (a TP shard beyond the head count
+    # sits idle and pins Eq. 3 to 0)
+    work = even_shard_sizes(B, dp) if tp == 1 else even_shard_sizes(heads, tp)
+    name = f"scaling_matrix/{kind}{n_devices}" if kind != "mix" \
+        else f"scaling_matrix/mix_{split}"
+    return BenchRecord(
+        name=name,
+        mesh=split,
+        us_per_call=TimingStats(samples_us),
+        knobs={"devices": n_devices, "split": split, "kind": kind},
+        derived={
+            "tok_s": round(tokens / t_n, 1),
+            "efficiency": round(
+                scaling_efficiency(tokens / t_n, tokens / t_1), 4
+            ),
+            "collective_frac": round(
+                collective_time_fraction(t_n, t_1), 4
+            ),
+            "shard_balance": round(shard_balance(work), 4),
+        },
+    )
+
+
+@scenario(
+    "scaling_matrix/dp",
+    tags=("tier2", "measured", "fig11", "table3", "scaling_matrix"),
+    paper_ref="Fig. 11a / Table III (measured mesh matrix)",
+    workloads=[
+        Workload(label=f"n{n}", arch=ARCH, knobs={"devices": n})
+        for n in DEVICE_COUNTS
+    ],
+)
+def scaling_matrix_dp(wl: Workload):
+    """DP replica scaling on simulated 1/2/4/8-device host meshes."""
+    n = wl.knobs["devices"]
+    yield _split_record("dp", (n, 1), n)
+
+
+@scenario(
+    "scaling_matrix/tp",
+    tags=("tier2", "measured", "fig11", "table3", "scaling_matrix"),
+    paper_ref="Fig. 11b / Table III (measured mesh matrix)",
+    workloads=[
+        Workload(label=f"n{n}", arch=ARCH, knobs={"devices": n})
+        for n in DEVICE_COUNTS
+        if n > 1
+    ],
+)
+def scaling_matrix_tp(wl: Workload):
+    """TP width scaling on simulated 2/4/8-device host meshes."""
+    n = wl.knobs["devices"]
+    yield _split_record("tp", (1, n), n)
+
+
+@scenario(
+    "scaling_matrix/mixed",
+    tags=("tier2", "measured", "fig11", "table3", "scaling_matrix"),
+    paper_ref="Table III (DP x TP interior splits)",
+    workloads=[
+        Workload(label="4x2", arch=ARCH, knobs={"devices": 8}),
+        Workload(label="2x4", arch=ARCH, knobs={"devices": 8}),
+    ],
+)
+def scaling_matrix_mixed(wl: Workload):
+    """Interior DPxTP splits of the 8-device mesh (4x2, 2x4)."""
+    shape = tuple(int(x) for x in wl.label.split("x"))
+    yield _split_record("mix", shape, wl.knobs["devices"])
+
+
+@scenario(
+    "scaling_matrix/pp",
+    tags=("tier2", "measured", "fig11", "scaling_matrix"),
+    paper_ref="Fig. 11c (most-loaded-stage model, measured)",
+    workloads=[
+        Workload(
+            label="-".join(map(str, sl)),
+            arch=ARCH,
+            knobs={"devices": 4, "stage_layers": sl},
+        )
+        for sl in PP_STAGE_SPLITS
+    ],
+)
+def scaling_matrix_pp(wl: Workload):
+    """GPipe layer-allocation splits on a simulated 4-device mesh,
+    checked against the most-loaded-stage bottleneck model."""
+    from repro.core.scalability import (
+        pp_calibrate_per_layer,
+        pp_model_check,
+        pp_stage_balance,
+    )
+    from repro.parallel.pipeline import pipeline_allocation
+
+    stage_layers = tuple(wl.knobs["stage_layers"])
+    split = wl.label
+    res = _pp_results()
+    balanced = "-".join(map(str, PP_STAGE_SPLITS[0]))
+    per_layer = pp_calibrate_per_layer(
+        _median_s(res[balanced]["samples_s"]), PP_STAGE_SPLITS[0], PP_M
+    )
+    t = _median_s(res[split]["samples_s"])
+    check = pp_model_check(t, stage_layers, PP_M, per_layer)
+    tokens = PP_M * PP_MB * PP_SEQ
+    yield BenchRecord(
+        name=f"scaling_matrix/pp_{split}",
+        mesh="4",
+        us_per_call=TimingStats([s * 1e6 for s in res[split]["samples_s"]]),
+        derived={
+            "tok_s": round(tokens / t, 1),
+            "max_stage": max(stage_layers),
+            "stage_balance": round(pp_stage_balance(stage_layers), 4),
+            "allocation": round(pipeline_allocation(stage_layers), 4),
+            "predicted_us": round(check.predicted_s * 1e6, 1),
+            "model_ratio": round(check.ratio, 4),
+            "model_ok": check.within(),
+        },
+    )

@@ -1,16 +1,28 @@
 """Benchmark harness entrypoint — every module registers scenarios with
 :mod:`repro.bench`; one shared runner times, stamps, and sinks them.
 
-    PYTHONPATH=src python -m benchmarks.run [--only <substr>]
+    PYTHONPATH=src python -m benchmarks.run [--only <name-or-substr>[,..]]
                                             [--tags tag1,tag2]
                                             [--tune]
+                                            [--compare [--bless]]
+                                            [--compare-only]
                                             [--json <path> | --no-json]
                                             [--list]
 
 Prints the legacy ``name,us_per_call,derived`` CSV (one line per
 measurement) on stdout and writes machine-readable BenchRecord JSONL
 (default ``results/bench/latest.jsonl``). Exits non-zero if any module
-fails to import or any scenario workload raises.
+fails to import or any scenario workload raises. ``--only`` takes a
+comma-separated list; a term that exactly names a registered scenario
+selects just that scenario (CI retries rerun one flaky scenario, not its
+group), anything else is the historical substring filter.
+
+``--compare`` diffs the resulting records against the blessed baselines
+under ``results/baselines/`` (noise-aware: p50 ratio + a sign test over
+per-iteration samples, see ``repro.bench.compare``), appends a point to
+``results/trajectory.jsonl``, and exits 3 on regression. ``--bless``
+accepts the fresh records as the new baselines. ``--compare-only`` skips
+running scenarios and compares the existing ``--json`` file as-is.
 
 | module                 | scenario groups   | paper artifact            |
 |------------------------|-------------------|---------------------------|
@@ -19,6 +31,7 @@ fails to import or any scenario workload raises.
 | bench_efficiency       | efficiency        | Fig. 9 (TFLOPs vs size)   |
 | bench_roofline         | roofline          | Fig. 10 (roofline models) |
 | bench_scalability      | scalability       | Table III / Fig. 11       |
+| bench_scaling_matrix   | scaling_matrix    | Fig. 11 (measured matrix) |
 | bench_batch_precision  | deploy            | Fig. 12 / Table IV        |
 | bench_kernels          | kernels           | kernel microbenchmarks    |
 | bench_serving          | serving           | Tier-2 serving latency    |
@@ -32,6 +45,7 @@ from __future__ import annotations
 
 import argparse
 import importlib
+import os
 import sys
 import traceback
 from pathlib import Path
@@ -52,6 +66,7 @@ MODULES = {
     "bench_efficiency": ("efficiency",),
     "bench_roofline": ("roofline",),
     "bench_scalability": ("scalability",),
+    "bench_scaling_matrix": ("scaling_matrix",),
     "bench_batch_precision": ("deploy",),
     "bench_kernels": ("kernels",),
     "bench_serving": ("serving",),
@@ -76,26 +91,119 @@ def import_benchmarks():
     return imported, failures
 
 
+def _only_terms(only: str | None) -> list[str]:
+    return [t for t in (only or "").split(",") if t]
+
+
 def _module_matches(only: str, mod_name: str) -> bool:
-    """Whether an ``--only`` substring targets a module (either the module
+    """Whether an ``--only`` filter targets a module (either the module
     file name or one of its scenario groups, in either direction — so
     `bench_kernels`, `alloc`, and `allocation/hidden` all resolve)."""
-    return only in mod_name or \
-        any(only in g or g in only for g in MODULES[mod_name])
+    return any(
+        t in mod_name or any(t in g or g in t for g in MODULES[mod_name])
+        for t in _only_terms(only))
+
+
+def _git_sha() -> str:
+    """Best-effort short commit id for trajectory points."""
+    import subprocess
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=REPO,
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip()
+    except Exception:
+        return ""
+
+
+def run_compare(records, baseline_dir: str, trajectory: str,
+                do_bless: bool) -> bool:
+    """Diff ``records`` against blessed baselines; append a trajectory
+    point; optionally bless. Returns True when the gate passes (no
+    regression, or --bless accepted the new numbers). Report on stderr —
+    stdout stays the legacy CSV stream."""
+    from repro.bench import (append_trajectory, bless, compare_records,
+                             load_baselines)
+    from repro.bench.baseline import record_backend
+    from repro.bench.compare import CompareReport
+
+    # compare each record against the baselines of ITS backend — names
+    # repeat across backends, so one flat name-keyed dict would let one
+    # backend's baselines shadow (and silently skip) another's
+    bdir = Path(baseline_dir)
+    by_backend = {}
+    for rec in records:
+        by_backend.setdefault(record_backend(rec), []).append(rec)
+    report = CompareReport()
+    any_baselines = False
+    for backend in sorted(by_backend):
+        baselines = load_baselines(bdir, backend)
+        any_baselines = any_baselines or bool(baselines)
+        sub = compare_records(by_backend[backend], baselines)
+        report.results.extend(sub.results)
+    # fingerprint skips are by design (a foreign host's baselines must
+    # never fail a run), but a gate that compared NOTHING while baselines
+    # exist is a silent no-op — say so loudly
+    skipped = len(report.by_status("skipped"))
+    if any_baselines and skipped and not report.trajectory_point()["compared"]:
+        print("WARNING: 0 comparable record pairs — baselines exist but "
+              f"{skipped} pairs were skipped (env fingerprint mismatch?); "
+              "the regression gate was a no-op this run", file=sys.stderr)
+    print("", file=sys.stderr)
+    for line in report.lines():
+        print(line, file=sys.stderr)
+    append_trajectory(
+        report.trajectory_point(
+            extra={"blessed": do_bless, "git": _git_sha()}),
+        Path(trajectory))
+    if do_bless:
+        written = bless(records, bdir)
+        for backend, path in written.items():
+            print(f"blessed baselines [{backend}] -> {path}",
+                  file=sys.stderr)
+        return True
+    if not report.ok:
+        names = ", ".join(r.name for r in report.regressions)
+        print(f"PERFORMANCE REGRESSION: {names}\n"
+              f"(re-bless intended slowdowns with --compare --bless)",
+              file=sys.stderr)
+    return report.ok
 
 
 def main(argv: list[str] | None = None) -> int:
-    from repro.bench import BenchRunner, CsvStdoutSink, JsonlSink, select
+    from repro.bench import (BenchRunner, CsvStdoutSink, JsonlSink,
+                             only_matches, read_jsonl, select)
 
     ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
     ap.add_argument("--only", default=None,
-                    help="substring filter on module/scenario name")
+                    help="comma-separated scenario filter: exact scenario "
+                         "name > substring on module/scenario/group name")
     ap.add_argument("--tags", default=None,
                     help="comma-separated tag filter (any-of)")
     ap.add_argument("--tune", action="store_true",
                     help="run the kernel autotuning sweeps (scenarios "
                          "tagged `tune`, excluded from normal runs); "
                          "winners persist to results/tuned/")
+    ap.add_argument("--compare", action="store_true",
+                    help="diff resulting records against blessed "
+                         "baselines; exit 3 on regression")
+    ap.add_argument("--compare-only", action="store_true",
+                    help="skip running scenarios; compare the existing "
+                         "--json records against baselines")
+    ap.add_argument("--bless", action="store_true",
+                    help="with --compare/--compare-only: accept the "
+                         "fresh records as the new blessed baselines")
+    ap.add_argument("--baseline-dir", metavar="DIR",
+                    default=os.environ.get(
+                        "REPRO_BASELINE_DIR",
+                        str(REPO / "results" / "baselines")),
+                    help="blessed-baseline directory "
+                         "(default: results/baselines; env "
+                         "REPRO_BASELINE_DIR overrides)")
+    ap.add_argument("--trajectory", metavar="PATH",
+                    default=str(REPO / "results" / "trajectory.jsonl"),
+                    help="trajectory JSONL appended on every compare "
+                         "(default: results/trajectory.jsonl)")
     ap.add_argument("--json", default=str(DEFAULT_JSONL), metavar="PATH",
                     help="BenchRecord JSONL output path "
                          f"(default: {DEFAULT_JSONL})")
@@ -106,6 +214,15 @@ def main(argv: list[str] | None = None) -> int:
     args = ap.parse_args(argv)
     tags = [t for t in (args.tags or "").split(",") if t] or None
 
+    if args.compare_only:
+        if not Path(args.json).exists():
+            print(f"--compare-only: no records at {args.json}",
+                  file=sys.stderr)
+            return 2
+        ok = run_compare(read_jsonl(args.json), args.baseline_dir,
+                         args.trajectory, args.bless)
+        return 0 if ok else 3
+
     imported, import_failures = import_benchmarks()
     # a filtered run only fails on import errors in modules it targets
     if args.only:
@@ -115,13 +232,16 @@ def main(argv: list[str] | None = None) -> int:
         print(tb, file=sys.stderr)
     import_failures = [(m, e) for m, e, _ in import_failures]
 
-    # select by scenario name/group substring, falling back to the module
+    # select per --only term: exact scenario name > name/group substring
+    # (repro.bench.scenario.only_matches), falling back to the module
     # file name (`--only bench_kernels` keeps its pre-harness meaning)
-    mod_groups = {g for m in MODULES
-                  if args.only and args.only in m for g in MODULES[m]}
+    terms = _only_terms(args.only)
+    mod_groups = {g for m in MODULES for t in terms
+                  if t in m for g in MODULES[m]}
     selected = [s for s in select(tags=tags)
-                if not args.only or args.only in s.name
-                or args.only in s.group or s.group in mod_groups]
+                if not terms
+                or any(only_matches(t, s) for t in terms)
+                or s.group in mod_groups]
 
     # tune sweeps are opt-in: excluded unless --tune; a bare --tune (no
     # other filter) runs only them
@@ -173,6 +293,14 @@ def main(argv: list[str] | None = None) -> int:
         for name, err in failures:
             print(f"  {name}: {err}", file=sys.stderr)
         return 1
+    if args.compare or args.bless:
+        # compare the full latest-known record set (the JSONL carries
+        # over records outside a filtered run), not just this invocation
+        records = read_jsonl(args.json) if not args.no_json \
+            else summary.records
+        if not run_compare(records, args.baseline_dir, args.trajectory,
+                           args.bless):
+            return 3
     return 0
 
 

@@ -11,8 +11,17 @@ Three layers:
   error capture, and result sinks;
 * :mod:`repro.bench.tune` — the kernel autotuner (import the submodule
   directly; kept out of the package namespace so registration-time
-  imports stay jax-free).
+  imports stay jax-free);
+* :mod:`repro.bench.baseline` / :mod:`repro.bench.compare` — blessed
+  per-(backend, env-fingerprint) baselines under ``results/baselines/``
+  and the noise-aware regression gate behind ``benchmarks.run --compare``.
 """
+from repro.bench.baseline import (bless, fingerprint,  # noqa: F401
+                                  fingerprint_compatible, load_baselines)
+from repro.bench.compare import (CompareReport, CompareResult,  # noqa: F401
+                                 Thresholds, append_trajectory,
+                                 compare_record, compare_records,
+                                 read_trajectory)
 from repro.bench.record import (CSV_HEADER, BenchRecord, env_fingerprint,
                                 read_jsonl, write_jsonl)
 from repro.bench.runner import (BenchRunner, CsvStdoutSink, JsonlSink,
@@ -21,14 +30,18 @@ from repro.bench.runner import (BenchRunner, CsvStdoutSink, JsonlSink,
                                 timeit_us)
 from repro.bench.scenario import (BENCH_MESH, BENCH_SHAPE, REGISTRY,
                                   Scenario, Workload, groups, mesh_str,
-                                  names, register, scenario, select,
-                                  unregister)
+                                  names, only_matches, register, scenario,
+                                  select, unregister)
 
 __all__ = [
     "BENCH_MESH", "BENCH_SHAPE", "BenchRecord", "BenchRunner", "CSV_HEADER",
-    "CsvStdoutSink", "JsonlSink", "ListSink", "REGISTRY", "RunSummary",
-    "Scenario", "TimingStats", "Workload", "env_fingerprint", "groups",
-    "mesh_str", "names", "read_jsonl", "register", "run_benchmarks",
+    "CompareReport", "CompareResult", "CsvStdoutSink", "JsonlSink",
+    "ListSink", "REGISTRY", "RunSummary", "Scenario", "Thresholds",
+    "TimingStats", "Workload", "append_trajectory", "bless",
+    "compare_record", "compare_records", "env_fingerprint", "fingerprint",
+    "fingerprint_compatible", "groups", "load_baselines", "mesh_str",
+    "names", "only_matches", "read_jsonl", "read_trajectory", "register",
+    "run_benchmarks",
     "run_with_devices", "scenario", "select", "timeit_us", "unregister",
     "write_jsonl",
 ]

@@ -23,7 +23,21 @@ from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Any, Dict, Iterable, List, Tuple
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2  # v2: per-iteration samples_us (empty = not measured)
+
+
+def _cpu_model() -> str:
+    """Best-effort CPU model string — CI fleets mix otherwise-identical
+    x86_64 runners whose clocks differ enough to fake a regression, so
+    the compare layer treats cross-model pairs as incomparable."""
+    try:
+        with open("/proc/cpuinfo") as fh:
+            for line in fh:
+                if line.startswith("model name"):
+                    return line.split(":", 1)[1].strip()
+    except OSError:
+        pass
+    return platform.processor() or ""
 
 
 def env_fingerprint() -> Dict[str, Any]:
@@ -33,6 +47,9 @@ def env_fingerprint() -> Dict[str, Any]:
         "platform": sys.platform,
         "machine": platform.machine(),
     }
+    cpu = _cpu_model()
+    if cpu:
+        env["cpu"] = cpu
     try:  # jax is a hard dep of the benchmarks but not of this module
         import jax
 
@@ -66,6 +83,10 @@ class BenchRecord:
     # the legacy CSV keeps its mean-only `name,us_per_call,derived` shape.
     p50_us: float = 0.0
     p95_us: float = 0.0
+    # raw per-iteration samples (microseconds, possibly capped by the
+    # runner). The baseline/regression layer (repro.bench.compare) runs
+    # its sign test over these; empty = not measured. JSONL only.
+    samples_us: List[float] = field(default_factory=list)
     # serving scenarios: median time-to-first-token (0.0 = not a serving
     # measurement). JSONL only, like the percentiles.
     ttft_us: float = 0.0

@@ -25,8 +25,7 @@ from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Any, Dict, Iterable, List, Optional, Sequence, TextIO, Tuple
 
-from repro.bench.record import (CSV_HEADER, BenchRecord, env_fingerprint,
-                                write_jsonl)
+from repro.bench.record import CSV_HEADER, BenchRecord, env_fingerprint
 from repro.bench.scenario import REGISTRY, Scenario, Workload, mesh_str, select
 
 REPO = Path(__file__).resolve().parents[3]
@@ -75,12 +74,23 @@ def timeit_us(fn, *args, iters: int = 5, warmup: int = 2) -> TimingStats:
     return TimingStats(samples)
 
 
+# cap on per-record raw samples so JSONL lines stay bounded even for
+# serving runs with hundreds of decode-step samples
+MAX_RECORD_SAMPLES = 64
+
+
 def run_with_devices(code: str, n_devices: int = 8,
                      timeout: int = 900) -> str:
     """Run a python snippet in a subprocess with N fake host devices.
-    (The parent process must keep seeing 1 device — see launch/dryrun.py.)"""
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    (The parent process must keep seeing 1 device — see launch/dryrun.py.)
+
+    The child env comes from :func:`repro.launch.mesh.host_device_env`,
+    which rewrites only the device-count flag inside ``XLA_FLAGS`` — any
+    other flags the caller (e.g. a CI matrix cell) set are preserved.
+    """
+    from repro.launch.mesh import host_device_env
+
+    env = host_device_env(n_devices)
     env["PYTHONPATH"] = str(SRC) + os.pathsep + env.get("PYTHONPATH", "")
     proc = subprocess.run([sys.executable, "-c", code], env=env,
                           capture_output=True, text=True, timeout=timeout)
@@ -176,11 +186,22 @@ class BenchRunner:
         merged.update(rec.knobs)
         rec.knobs = merged
         rec.env = rec.env or self.env
-        # a TimingStats mean carries per-iter percentiles: stamp + strip
+        # a TimingStats mean carries per-iter percentiles and the raw
+        # samples the compare layer's sign test needs: stamp + strip
         us = rec.us_per_call
         if not rec.p50_us and hasattr(us, "p50_us"):
             rec.p50_us = float(us.p50_us)
             rec.p95_us = float(us.p95_us)
+        if not rec.samples_us and hasattr(us, "samples"):
+            # cap by striding over the WHOLE chronological sequence (not a
+            # head slice): the compare sign test must see late-run samples
+            # or a degradation tail could hide behind a fast warm start
+            samples = us.samples
+            if len(samples) > MAX_RECORD_SAMPLES:
+                step = (len(samples) - 1) / (MAX_RECORD_SAMPLES - 1)
+                samples = [samples[round(i * step)]
+                           for i in range(MAX_RECORD_SAMPLES)]
+            rec.samples_us = [round(float(s), 3) for s in samples]
         rec.us_per_call = float(us)
         return rec
 

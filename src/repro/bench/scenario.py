@@ -110,13 +110,26 @@ def groups() -> List[str]:
     return sorted({s.group for s in REGISTRY.values()})
 
 
+def only_matches(term: str, scen: Scenario) -> bool:
+    """One ``--only`` term against one scenario. A term that is the *exact*
+    name of a registered scenario selects only that scenario (so CI retries
+    rerun one flaky scenario, not its whole group); any other term keeps
+    the historical substring semantics over name and group."""
+    if term in REGISTRY:
+        return scen.name == term
+    return term in scen.name or term in scen.group
+
+
 def select(only: Optional[str] = None,
            tags: Optional[Sequence[str]] = None) -> Iterator[Scenario]:
-    """Scenarios matching an ``--only`` substring and/or any of ``tags``,
-    in registration order (which follows module order in benchmarks.run)."""
+    """Scenarios matching an ``--only`` filter and/or any of ``tags``, in
+    registration order (which follows module order in benchmarks.run).
+    ``only`` is a comma-separated list of terms, each resolved by
+    :func:`only_matches` (exact scenario name > substring)."""
     want = set(tags or ())
+    terms = [t for t in (only or "").split(",") if t]
     for scen in REGISTRY.values():
-        if only and only not in scen.name and only not in scen.group:
+        if terms and not any(only_matches(t, scen) for t in terms):
             continue
         if want and not want.intersection(scen.tags):
             continue

@@ -28,7 +28,7 @@ import jax
 
 
 def _flatten(tree) -> Tuple[list, Any]:
-    from repro.optim.adamw import Q8  # registered pytree (NamedTuple)
+    from repro.optim.adamw import Q8  # noqa: F401 (registers the pytree)
     leaves, treedef = jax.tree.flatten(tree)
     return leaves, treedef
 

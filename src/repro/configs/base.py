@@ -7,7 +7,7 @@ RunConfig binds a model to a shape, a mesh, and execution-policy knobs.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 

@@ -15,9 +15,9 @@ from repro.bench.record import BenchRecord
 from repro.configs.base import MeshConfig, ModelConfig, ShapeConfig
 from repro.core import metrics, sections
 from repro.core.hlo_analysis import CostReport, analyze_hlo
-from repro.core.roofline import (HBM_BW, PEAK_FLOPS_BF16, RooflineReport,
-                                 model_flops_decode, model_flops_prefill,
-                                 model_flops_train, roofline)
+from repro.core.roofline import (PEAK_FLOPS_BF16, model_flops_decode,
+                                 model_flops_prefill, model_flops_train,
+                                 roofline)
 
 
 @dataclass

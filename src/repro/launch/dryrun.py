@@ -227,7 +227,6 @@ def main():
     cells = list(all_cells()) if args.all else [(args.arch, args.shape)]
     failures = []
     for arch_name, shape_name in cells:
-        t0 = time.time()
         try:
             rec = run_cell(arch_name, shape_name, multi_pod=args.multi_pod,
                            save_hlo=args.save_hlo)

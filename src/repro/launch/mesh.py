@@ -12,9 +12,43 @@ directly.
 """
 from __future__ import annotations
 
+import os
+import re
+from typing import Dict, Optional
+
 import jax
 
 from repro.configs.base import MeshConfig
+
+_DEVICE_COUNT_FLAG = "--xla_force_host_platform_device_count"
+
+
+def host_device_env(n_devices: int,
+                    base_env: Optional[Dict[str, str]] = None
+                    ) -> Dict[str, str]:
+    """Env dict for a child process simulating an ``n_devices`` host mesh.
+
+    Rewrites only the device-count flag inside ``XLA_FLAGS`` so any other
+    flags already present (e.g. set by a CI matrix cell for the parent)
+    survive into the child. The parent's own device count is untouched —
+    jax locks it on first init, which is why multi-device measurement is
+    subprocess-spawned at all (see bench/runner.run_with_devices).
+    """
+    env = dict(os.environ if base_env is None else base_env)
+    flags = [f for f in env.get("XLA_FLAGS", "").split()
+             if not f.startswith(_DEVICE_COUNT_FLAG)]
+    flags.append(f"{_DEVICE_COUNT_FLAG}={n_devices}")
+    env["XLA_FLAGS"] = " ".join(flags)
+    return env
+
+
+def simulated_device_count(env: Optional[Dict[str, str]] = None
+                           ) -> Optional[int]:
+    """The host-platform device count forced via ``XLA_FLAGS``, if any.
+    Reads the env (not jax) so it works before jax initializes."""
+    flags = (os.environ if env is None else env).get("XLA_FLAGS", "")
+    m = re.search(re.escape(_DEVICE_COUNT_FLAG) + r"=(\d+)", flags)
+    return int(m.group(1)) if m else None
 
 
 def _mk(shape, axes):

@@ -10,10 +10,9 @@ import argparse
 import logging
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
-from repro.configs import RunConfig, SHAPES, ShapeConfig, get_arch, reduced
+from repro.configs import RunConfig, ShapeConfig, get_arch, reduced
 from repro.data.pipeline import SyntheticLM
 from repro.launch.mesh import make_mesh, set_mesh
 from repro.parallel import sharding as shd

@@ -13,7 +13,6 @@ axes (all-gather-of-quantized-shards form), used by the optional
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Tuple
 
 import numpy as np
@@ -22,7 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.parallel.compat import axis_size, shard_map
+from repro.parallel.compat import shard_map
 
 
 def _shard_map(fn, in_specs, out_specs):
@@ -37,7 +36,6 @@ def partitioned_decode_attention(q, k_cache, v_cache, cache_len,
     seq_axis and B over batch_axes; cache_len: scalar valid length, or a
     (B,) vector of per-row lengths (continuous batching)."""
     B, _, Hq, D = q.shape
-    S = k_cache.shape[1]
     Hkv = k_cache.shape[2]
     g = Hq // Hkv
     bspec = batch_axes if batch_axes else None
@@ -45,7 +43,6 @@ def partitioned_decode_attention(q, k_cache, v_cache, cache_len,
     len_spec = P(bspec) if per_row else P()
 
     def local(q, k, v, cache_len):
-        nshard = axis_size(seq_axis)
         idx = jax.lax.axis_index(seq_axis)
         s_loc = k.shape[1]
         qg = q.reshape(-1, Hkv, g, D)
@@ -94,7 +91,6 @@ def compressed_psum_grads(grads, residuals, data_axes=("data",)):
 
     def reduce_leaf(g, r):
         flat = g.reshape(-1).astype(jnp.float32) + r
-        L = flat.shape[0]
 
         def body(x):
             n = jax.lax.psum(1, axis)

@@ -13,7 +13,7 @@ sharding within stages, noted in DESIGN.md.
 """
 from __future__ import annotations
 
-from typing import Callable, List, Sequence
+from typing import List, Sequence
 
 import numpy as np
 
@@ -120,3 +120,23 @@ def pipeline_step_time(stage_layers: Sequence[int], per_layer_s: float,
     """Analytic GPipe step time: (M + S - 1) x slowest stage."""
     return (n_microbatches + len(stage_layers) - 1) * \
         max(stage_layers) * per_layer_s
+
+
+def stage_utilization(stage_layers: Sequence[int]) -> List[float]:
+    """Useful-layer fraction per stage under this module's padded scan
+    schedule: every stage executes Lmax layer slots and masks the invalid
+    ones, so stage s does n_s/Lmax useful work — the per-stage Eq. 1
+    allocation ratio of the pipeline."""
+    if not stage_layers:
+        return []
+    lmax = max(stage_layers)
+    return [n / lmax for n in stage_layers]
+
+
+def pipeline_allocation(stage_layers: Sequence[int]) -> float:
+    """Eq. 2 over pipeline stages. Every stage is busy for the same wall
+    time under the padded schedule (runtime weights are equal), so the
+    runtime-weighted allocation collapses to the mean per-stage useful
+    fraction: mean(n_s) / Lmax. 1.0 = perfectly even split."""
+    util = stage_utilization(stage_layers)
+    return sum(util) / len(util) if util else 0.0

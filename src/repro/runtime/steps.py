@@ -4,16 +4,12 @@ train/serve loops execute.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import ModelConfig, RunConfig
+from repro.configs.base import RunConfig
 from repro.models import build, Runtime
-from repro.models.frontends import prefill_batch_spec, train_batch_spec
 from repro.optim.adamw import AdamW, warmup_cosine
 from repro.parallel import sharding as shd
 

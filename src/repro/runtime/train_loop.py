@@ -21,8 +21,6 @@ from typing import Callable, Optional
 
 import numpy as np
 
-import jax
-
 from repro.checkpoint import checkpoint as ckpt
 
 log = logging.getLogger("repro.train")

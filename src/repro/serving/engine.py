@@ -40,7 +40,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.serving.request import (Request, RequestMetrics, ServeReport,
-                                   SimClock, WallClock)
+                                   WallClock)
 
 
 def _default_prompt_to_batch(prompts: np.ndarray) -> dict:

@@ -14,9 +14,12 @@ sys.path.insert(0, str(Path(__file__).resolve().parent))
 
 def run_with_devices(code: str, n_devices: int = 8, timeout: int = 600):
     """Run a python snippet in a subprocess with N fake host devices.
-    (The main pytest process must keep seeing 1 device — see dryrun.py.)"""
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    (The main pytest process must keep seeing 1 device — see dryrun.py.)
+    Env via launch/mesh.host_device_env: only the count flag is rewritten,
+    so a CI cell's other XLA_FLAGS survive into the child."""
+    from repro.launch.mesh import host_device_env
+
+    env = host_device_env(n_devices)
     env["PYTHONPATH"] = str(SRC) + os.pathsep + env.get("PYTHONPATH", "")
     proc = subprocess.run([sys.executable, "-c", code], env=env,
                           capture_output=True, text=True, timeout=timeout)

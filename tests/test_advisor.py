@@ -1,7 +1,5 @@
 """Mesh advisor: analytic rankings must reproduce the measured §Perf
 findings (EXPERIMENTS.md) and respect basic invariants."""
-import pytest
-
 from repro.configs import ARCHS, SHAPES
 from repro.core.mesh_advisor import advise, best_mesh
 

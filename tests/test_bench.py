@@ -120,6 +120,22 @@ def test_select_filters_by_substring_and_tags(scratch_registry):
     assert [s.name for s in select(only="_test/nope")] == []
 
 
+def test_select_exact_name_beats_substring(scratch_registry):
+    """An --only term that exactly names a scenario selects just it (the
+    CI flaky-retry path), even when it is a substring of siblings; comma
+    lists union their terms."""
+    for name in ["_test/sched", "_test/sched_static", "_test/other"]:
+        register(Scenario(name=name, fn=lambda wl: [], group="_test"))
+        scratch_registry.append(name)
+    # substring term: matches both sched scenarios
+    assert [s.name for s in select(only="sched")] \
+        == ["_test/sched", "_test/sched_static"]
+    # exact term: only the named scenario, not its prefix-sharing sibling
+    assert [s.name for s in select(only="_test/sched")] == ["_test/sched"]
+    assert [s.name for s in select(only="_test/sched,_test/other")] \
+        == ["_test/sched", "_test/other"]
+
+
 # ----------------------------------------------------------------- runner
 def _tiny_scenarios():
     ok = Scenario(
@@ -177,6 +193,24 @@ def test_runner_record_knobs_override_workload_knobs():
         group="_test", workloads=(Workload(knobs={"mode": "O0", "L": 4}),))
     summary = BenchRunner().run([scen])
     assert summary.records[0].knobs == {"mode": "O3", "L": 4}
+
+
+# ------------------------------------------- fake-device env helper
+def test_host_device_env_rewrites_only_the_count_flag():
+    """The scaling-matrix children must inherit a CI cell's other XLA
+    flags; only the forced device count is rewritten (never duplicated,
+    which XLA would resolve unpredictably)."""
+    from repro.launch.mesh import host_device_env, simulated_device_count
+
+    base = {"XLA_FLAGS": "--xla_foo=1 "
+                         "--xla_force_host_platform_device_count=4",
+            "OTHER": "x"}
+    env = host_device_env(8, base_env=base)
+    assert "--xla_foo=1" in env["XLA_FLAGS"]
+    assert env["XLA_FLAGS"].count("force_host_platform_device_count") == 1
+    assert simulated_device_count(env) == 8
+    assert env["OTHER"] == "x"
+    assert simulated_device_count({"XLA_FLAGS": ""}) is None
 
 
 # ------------------------------------------------- harness CLI glue

@@ -1,0 +1,150 @@
+"""tools/ci_checks.py: every CI gate assertion must reproduce locally
+against a JSONL file, pass on healthy records, and name the offender on
+violation (no jax needed — synthetic records only)."""
+from __future__ import annotations
+
+import pytest
+
+import tools.ci_checks as ci_checks
+from repro.bench import BenchRecord, write_jsonl
+
+
+def _serving_records(static_rps=98.0, continuous_rps=150.0):
+    mk = lambda name, rps: BenchRecord(
+        name=name, group="serving", us_per_call=500.0, p50_us=450.0,
+        p95_us=900.0, ttft_us=1200.0, derived={"goodput_rps": rps})
+    return [mk("serving/sched_static", static_rps),
+            mk("serving/sched_continuous", continuous_rps)]
+
+
+def _matrix_records(pp_tok=(75000.0, 58000.0, 43000.0), model_ok=True):
+    recs = []
+    for n in (1, 2, 4, 8):
+        recs.append(BenchRecord(
+            name=f"scaling_matrix/dp{n}", group="scaling_matrix",
+            us_per_call=1000.0 * n,
+            derived={"efficiency": 1.0 / n, "collective_frac": 1 - 1.0 / n,
+                     "shard_balance": 1.0}))
+    for n in (2, 4, 8):
+        recs.append(BenchRecord(
+            name=f"scaling_matrix/tp{n}", group="scaling_matrix",
+            us_per_call=900.0 * n,
+            derived={"efficiency": 1.2 / n, "collective_frac": 0.5,
+                     "shard_balance": 1.0 if n <= 4 else 0.0}))
+    for split, max_stage, tok in zip(
+            ("2-2-2-2", "1-2-2-3", "1-1-1-5"), (2, 3, 5), pp_tok):
+        recs.append(BenchRecord(
+            name=f"scaling_matrix/pp_{split}", group="scaling_matrix",
+            us_per_call=1e6 / tok,
+            derived={"max_stage": max_stage, "tok_s": tok,
+                     "model_ratio": 0.9, "model_ok": model_ok,
+                     "stage_balance": 1.0, "allocation": 1.0}))
+    return recs
+
+
+def _run(tmp_path, records, *argv):
+    jsonl = tmp_path / "latest.jsonl"
+    write_jsonl(records, jsonl)
+    return ci_checks.main([*argv, "--jsonl", str(jsonl)])
+
+
+def test_serving_goodput_passes_and_fails(tmp_path, capsys):
+    assert _run(tmp_path, _serving_records(), "serving-goodput") == 0
+    assert _run(tmp_path, _serving_records(200.0, 150.0),
+                "serving-goodput") == 1
+    assert "goodput" in capsys.readouterr().err
+
+
+def test_serving_goodput_requires_both_schedulers(tmp_path):
+    assert _run(tmp_path, _serving_records()[:1], "serving-goodput") == 1
+
+
+def test_scaling_efficiency_passes_on_healthy_matrix(tmp_path):
+    assert _run(tmp_path, _matrix_records(), "scaling-efficiency") == 0
+
+
+def test_scaling_efficiency_rejects_model_escape(tmp_path, capsys):
+    assert _run(tmp_path, _matrix_records(model_ok=False),
+                "scaling-efficiency") == 1
+    assert "most-loaded-stage" in capsys.readouterr().err
+
+
+def test_scaling_efficiency_rejects_inverted_pp_ordering(tmp_path):
+    bad = _matrix_records(pp_tok=(43000.0, 58000.0, 75000.0))
+    assert _run(tmp_path, bad, "scaling-efficiency") == 1
+
+
+def test_scaling_efficiency_requires_full_device_sweep(tmp_path):
+    partial = [r for r in _matrix_records() if "dp8" not in r.name]
+    assert _run(tmp_path, partial, "scaling-efficiency") == 1
+
+
+def test_inject_slowdown_scales_all_timings(tmp_path):
+    recs = [BenchRecord(name="g/a", us_per_call=100.0, p50_us=90.0,
+                        p95_us=110.0, samples_us=[80.0, 90.0, 110.0])]
+    jsonl = tmp_path / "latest.jsonl"
+    write_jsonl(recs, jsonl)
+    assert ci_checks.main(["inject-slowdown", "--factor", "3",
+                           "--jsonl", str(jsonl)]) == 0
+    from repro.bench import read_jsonl
+
+    back = read_jsonl(jsonl)[0]
+    assert back.us_per_call == pytest.approx(300.0)
+    assert back.p50_us == pytest.approx(270.0)
+    assert back.samples_us == pytest.approx([240.0, 270.0, 330.0])
+
+
+def test_missing_jsonl_exits_nonzero(tmp_path):
+    code = ci_checks.main(
+        ["serving-goodput", "--jsonl", str(tmp_path / "nope.jsonl")])
+    assert code != 0
+
+
+def test_regression_gate_full_loop(tmp_path):
+    """compare -> bless -> scratch 2x slowdown -> exit 3, in one command;
+    the real JSONL and baselines survive untouched by the tripwire."""
+    jsonl = tmp_path / "latest.jsonl"
+    recs = [BenchRecord(name="g/a", us_per_call=1000.0, p50_us=1000.0,
+                        samples_us=[950.0, 1000.0, 1050.0, 990.0, 1010.0])]
+    write_jsonl(recs, jsonl)
+    args = ["regression-gate", "--jsonl", str(jsonl),
+            "--baseline-dir", str(tmp_path / "baselines"),
+            "--trajectory", str(tmp_path / "trajectory.jsonl")]
+    assert ci_checks.main(args) == 0
+    from repro.bench import read_jsonl
+
+    assert read_jsonl(jsonl)[0].us_per_call == 1000.0  # not slowed
+    assert ci_checks.main(args) == 0  # idempotent on unchanged perf
+
+
+def test_regression_gate_propagates_a_real_regression_as_exit_3(tmp_path):
+    """A genuine regression vs the restored baselines is exit 3 (the
+    reserved regression code), never 1 ('gate broken')."""
+    jsonl = tmp_path / "latest.jsonl"
+    recs = [BenchRecord(name="g/a", us_per_call=1000.0, p50_us=1000.0,
+                        samples_us=[950.0, 1000.0, 1050.0, 990.0, 1010.0])]
+    write_jsonl(recs, jsonl)
+    args = ["regression-gate", "--jsonl", str(jsonl),
+            "--baseline-dir", str(tmp_path / "baselines"),
+            "--trajectory", str(tmp_path / "trajectory.jsonl")]
+    assert ci_checks.main(args) == 0  # blesses
+    ci_checks.main(["inject-slowdown", "--factor", "2",
+                    "--jsonl", str(jsonl)])
+    assert ci_checks.main(args) == 3
+    # exactly one real trajectory point per clean gate run (the bless and
+    # self-test compares write to scratch)
+    from repro.bench import read_trajectory
+
+    assert len(read_trajectory(tmp_path / "trajectory.jsonl")) == 2
+
+
+def test_regression_gate_fails_when_it_cannot_trip(tmp_path):
+    """Records the gate can never regress on (sub-min_us noise) must fail
+    the self-test instead of green-lighting a broken gate."""
+    jsonl = tmp_path / "latest.jsonl"
+    write_jsonl([BenchRecord(name="g/tiny", us_per_call=10.0)], jsonl)
+    code = ci_checks.main(
+        ["regression-gate", "--jsonl", str(jsonl),
+         "--baseline-dir", str(tmp_path / "baselines"),
+         "--trajectory", str(tmp_path / "trajectory.jsonl")])
+    assert code == 1

@@ -1,0 +1,270 @@
+"""repro.bench.compare / repro.bench.baseline: blessed-baseline
+round-trips, fingerprint gating, the noise-aware regression verdict
+(p50 ratio + sign test), trajectory points, and the benchmarks.run
+--compare/--bless CLI plumbing (in-process, no jax)."""
+from __future__ import annotations
+
+import random
+
+import pytest
+
+from repro.bench import (BenchRecord, BenchRunner, Scenario, TimingStats,
+                         Workload, bless, compare_record, compare_records,
+                         load_baselines, read_jsonl, read_trajectory,
+                         write_jsonl)
+from repro.bench.baseline import (baseline_path, blessable, fingerprint,
+                                  fingerprint_compatible)
+from repro.bench.compare import (FASTER, NEW, NOISY, OK, REGRESSION,
+                                 SKIPPED, sign_test_p)
+
+ENV = {"python": "3.10.16", "platform": "linux", "machine": "x86_64",
+       "jax": "0.4.37", "backend": "cpu", "device_count": 1}
+
+
+def rec(name="g/s", us=1000.0, samples=None, env=ENV, status="ok",
+        p50=0.0):
+    samples = list(samples or [])
+    return BenchRecord(name=name, group="g", us_per_call=us, p50_us=p50,
+                       samples_us=samples, status=status, env=dict(env))
+
+
+# ------------------------------------------------------- baseline store
+def test_baseline_bless_and_load_round_trip(tmp_path):
+    records = [rec("g/a", us=100.0, samples=[90, 100, 110]),
+               rec("g/b", us=200.0)]
+    written = bless(records, tmp_path)
+    assert set(written) == {"cpu"}
+    assert written["cpu"] == baseline_path(tmp_path, "cpu")
+    back = load_baselines(tmp_path, "cpu")
+    assert set(back) == {"g/a", "g/b"}
+    assert back["g/a"].samples_us == [90, 100, 110]
+    assert load_baselines(tmp_path, "tpu") == {}  # never blessed
+
+
+def test_bless_overwrites_by_name_and_keeps_others(tmp_path):
+    bless([rec("g/a", us=100.0), rec("g/keep", us=50.0)], tmp_path)
+    bless([rec("g/a", us=300.0)], tmp_path)  # re-bless one name
+    back = load_baselines(tmp_path, "cpu")
+    assert back["g/a"].us_per_call == 300.0   # overwritten
+    assert back["g/keep"].us_per_call == 50.0  # untouched
+
+
+def test_blessable_excludes_error_and_untimed_records():
+    keep = rec("g/a", us=100.0)
+    out = blessable([keep, rec("g/err", us=100.0, status="error"),
+                     rec("g/analytic", us=0.0)])
+    assert out == [keep]
+
+
+def test_fingerprint_compatibility_rules():
+    assert fingerprint_compatible(fingerprint(ENV), fingerprint(ENV))
+    other = dict(ENV, jax="0.5.0")
+    assert not fingerprint_compatible(fingerprint(ENV), fingerprint(other))
+    # a key missing on one side never counts as a mismatch
+    sparse = {"backend": "cpu"}
+    assert fingerprint_compatible(sparse, fingerprint(ENV))
+
+
+# ------------------------------------------------------------ verdicts
+def test_compare_statuses_ok_new_faster():
+    base = rec(us=1000.0)
+    assert compare_record(rec(us=1000.0), base).status == OK
+    assert compare_record(rec(us=1100.0), base).status == OK  # within tol
+    assert compare_record(rec(us=100.0), base).status == FASTER
+    assert compare_record(rec(us=1000.0), None).status == NEW
+
+
+def test_fingerprint_mismatch_skips_not_fails():
+    base = rec(us=1000.0, env=dict(ENV, jax="0.5.0"))
+    res = compare_record(rec(us=5000.0), base)  # 5x slower, wrong env
+    assert res.status == SKIPPED
+    assert "fingerprint" in res.detail
+    report = compare_records([rec(us=5000.0)], {"g/s": base})
+    assert report.ok  # skips never fail the gate
+
+
+def test_sub_min_us_baseline_is_skipped():
+    res = compare_record(rec(us=90.0), rec(us=30.0))  # 3x but noise-sized
+    assert res.status == SKIPPED
+
+
+def test_regression_needs_ratio_and_sign_test():
+    base = rec(us=1000.0, samples=[950, 1000, 1050, 1000, 990])
+    # 2x slower, every sample above the old median: regression
+    slow = rec(us=2000.0, samples=[1900, 2000, 2100, 2050, 1950])
+    res = compare_record(slow, base)
+    assert res.status == REGRESSION
+    assert res.ratio == pytest.approx(2.0)
+    # mean inflated by one spike, but samples straddle the old median:
+    # the sign test vetoes the ratio -> noisy, not a failure
+    spiky = rec(us=1400.0, samples=[900, 950, 1000, 980, 3170])
+    res = compare_record(spiky, base)
+    assert res.status == NOISY
+    assert compare_records([spiky], {"g/s": base}).ok
+
+
+def test_unanimous_samples_regress_even_below_significance():
+    """4 samples can never reach alpha=0.05 (best p = 1/16), but when
+    every sample sits above the old median there is no contrary evidence
+    — the unanimity clause must still fail the gate."""
+    base = rec(us=1000.0, samples=[950, 1000, 1050, 1000])
+    slow = rec(us=2000.0, samples=[1900, 2000, 2100, 2050])
+    res = compare_record(slow, base)
+    assert res.status == REGRESSION
+    # one straddling sample restores the noise veto
+    spiky = rec(us=1600.0, samples=[900, 2000, 2100, 3400])
+    assert compare_record(spiky, base).status == NOISY
+
+
+def test_regression_without_samples_needs_a_larger_ratio_breach():
+    """Sample-less records have no sign-test veto, so ordinary one-shot
+    jitter (25-60%) must read as noisy; only a big breach regresses."""
+    res = compare_record(rec(us=2000.0), rec(us=1000.0))  # 2x
+    assert res.status == REGRESSION
+    assert "ratio-only" in res.detail
+    res = compare_record(rec(us=1400.0), rec(us=1000.0))  # 1.4x jitter
+    assert res.status == NOISY
+    assert "without samples" in res.detail
+
+
+def test_sign_test_p_values():
+    assert sign_test_p(5, 5) == pytest.approx(1 / 32)
+    assert sign_test_p(4, 5) == pytest.approx(6 / 32)
+    assert sign_test_p(0, 5) == pytest.approx(1.0)
+    assert sign_test_p(0, 0) == 1.0
+
+
+def test_threshold_verdict_is_deterministic_under_seeded_fake_timer():
+    """Same seeded fake-timer samples -> byte-identical verdicts, and a
+    borderline +34% drift whose samples straddle the old median stays
+    `noisy` (never flaps to regression) run after run."""
+    rng = random.Random(42)
+    base_samples = sorted(1000.0 + rng.gauss(0, 30) for _ in range(5))
+    base = rec(us=sum(base_samples) / 5, samples=base_samples,
+               p50=base_samples[2])
+    drift = [s * 1.5 if i != 0 else s * 0.7
+             for i, s in enumerate(base_samples)]
+    fresh = rec(us=sum(drift) / 5, samples=drift)
+    verdicts = [compare_record(fresh, base) for _ in range(3)]
+    assert all(v.status == verdicts[0].status for v in verdicts)
+    assert verdicts[0].status == NOISY
+    # a genuine seeded 2x slowdown is still caught every time
+    slow = rec(us=2000.0, samples=[s * 2 for s in base_samples])
+    assert all(compare_record(slow, base).status == REGRESSION
+               for _ in range(3))
+
+
+def test_compare_uses_p50_over_mean_when_available():
+    base = rec(us=5000.0, p50=1000.0)
+    fresh = rec(us=1000.0, p50=1000.0)
+    res = compare_record(fresh, base)
+    assert res.status == OK and res.ratio == pytest.approx(1.0)
+
+
+# ------------------------------------------------- report + trajectory
+def test_report_counts_geomean_and_trajectory(tmp_path):
+    from repro.bench import append_trajectory
+
+    base = {"g/a": rec("g/a", us=1000.0), "g/b": rec("g/b", us=1000.0)}
+    report = compare_records(
+        [rec("g/a", us=2000.0), rec("g/b", us=500.0), rec("g/new")],
+        base)
+    assert [r.name for r in report.regressions] == ["g/a"]
+    c = report.counts()
+    assert c[REGRESSION] == 1 and c[FASTER] == 1 and c[NEW] == 1
+    assert report.geomean_ratio() == pytest.approx(1.0)  # 2.0 * 0.5
+    traj = tmp_path / "trajectory.jsonl"
+    append_trajectory(report.trajectory_point(extra={"git": "abc123"}),
+                      traj)
+    append_trajectory(report.trajectory_point(), traj)
+    points = read_trajectory(traj)
+    assert len(points) == 2
+    assert points[0]["git"] == "abc123"
+    assert points[0]["regressions"] == ["g/a"]
+    assert points[0]["compared"] == 2
+
+
+def test_runner_stamps_samples_us_from_timing_stats():
+    scen = Scenario(
+        name="_test/samples",
+        fn=lambda wl: [BenchRecord(
+            name="_test/samples/r",
+            us_per_call=TimingStats([1.0, 2.0, 9.0]))],
+        group="_test", workloads=(Workload(),))
+    out = BenchRunner().run([scen]).records[0]
+    assert out.samples_us == [1.0, 2.0, 9.0]
+    back = BenchRecord.from_json_line(out.to_json_line())
+    assert back.samples_us == [1.0, 2.0, 9.0]
+
+
+# --------------------------------------------------------- CLI plumbing
+def _cli(tmp_path, jsonl, *extra):
+    import benchmarks.run as bench_run
+
+    return bench_run.main([
+        "--compare-only", "--json", str(jsonl),
+        "--baseline-dir", str(tmp_path / "baselines"),
+        "--trajectory", str(tmp_path / "trajectory.jsonl"), *extra])
+
+
+def test_cli_bless_then_compare_then_injected_slowdown(tmp_path, capsys):
+    jsonl = tmp_path / "latest.jsonl"
+    records = [rec("g/a", us=1000.0, samples=[950, 1000, 1050, 990, 1010]),
+               rec("g/b", us=400.0)]
+    write_jsonl(records, jsonl)
+
+    assert _cli(tmp_path, jsonl, "--bless") == 0
+    assert load_baselines(tmp_path / "baselines", "cpu").keys() \
+        == {"g/a", "g/b"}
+    assert _cli(tmp_path, jsonl) == 0          # clean re-run passes
+
+    import tools.ci_checks as ci_checks
+
+    assert ci_checks.main(["inject-slowdown", "--factor", "2",
+                           "--jsonl", str(jsonl)]) == 0
+    assert read_jsonl(jsonl)[0].us_per_call == pytest.approx(2000.0)
+    assert _cli(tmp_path, jsonl) == 3          # the gate trips
+    err = capsys.readouterr().err
+    assert "PERFORMANCE REGRESSION" in err
+    # blessing the slowdown accepts it as the new baseline
+    assert _cli(tmp_path, jsonl, "--bless") == 0
+    assert _cli(tmp_path, jsonl) == 0
+    points = read_trajectory(tmp_path / "trajectory.jsonl")
+    assert len(points) == 5
+    assert points[2]["regressions"] == ["g/a", "g/b"]
+
+
+def test_cli_compare_only_without_records_errors(tmp_path):
+    assert _cli(tmp_path, tmp_path / "missing.jsonl") == 2
+
+
+def test_cli_compares_per_backend_without_shadowing(tmp_path):
+    """Names repeat across backends; a cpu record must be diffed against
+    the cpu baseline even when a tpu baseline of the same name exists
+    (a flattened name-keyed dict would shadow it into a fingerprint
+    skip and silently pass a real regression)."""
+    jsonl = tmp_path / "latest.jsonl"
+    tpu = rec("g/a", us=2000.0, env=dict(ENV, backend="tpu"))
+    write_jsonl([rec("g/a", us=1000.0), tpu], jsonl)
+    assert _cli(tmp_path, jsonl, "--bless") == 0
+    assert set(load_baselines(tmp_path / "baselines", "tpu")) == {"g/a"}
+    # cpu regresses 3x, tpu unchanged
+    write_jsonl([rec("g/a", us=3000.0), tpu], jsonl)
+    assert _cli(tmp_path, jsonl) == 3
+
+
+def test_runner_sample_cap_strides_over_the_whole_run():
+    """The 64-sample cap must subsample the full chronological sequence,
+    not keep a head slice — a late-run degradation tail has to stay
+    visible to the compare sign test."""
+    samples = [100.0] * 60 + [500.0] * 60
+    scen = Scenario(
+        name="_test/cap",
+        fn=lambda wl: [BenchRecord(name="_test/cap/r",
+                                   us_per_call=TimingStats(samples))],
+        group="_test", workloads=(Workload(),))
+    out = BenchRunner().run([scen]).records[0]
+    assert len(out.samples_us) == 64
+    assert out.samples_us[0] == 100.0
+    assert out.samples_us[-1] == 500.0
+    assert sum(1 for s in out.samples_us if s == 500.0) >= 30

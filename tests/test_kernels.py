@@ -2,7 +2,6 @@
 with hypothesis sweeps over shapes/dtypes (deterministic fallback sampler
 when hypothesis isn't installed — see tests/_hypothesis_compat.py)."""
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 import jax

@@ -1,7 +1,6 @@
 """DABench core: Eq. 1-5 unit tests, property tests on metric invariants,
 HLO-analyzer verification against hand-built modules, section partitioner
 invariants."""
-import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 

@@ -13,7 +13,6 @@ from conftest import run_with_devices
 from repro.checkpoint import checkpoint as ckpt
 from repro.configs import ARCHS, MeshConfig, RunConfig, ShapeConfig, reduced
 from repro.data.pipeline import SyntheticLM
-from repro.models.frontends import synth_batch
 from repro.optim.adamw import AdamW, warmup_cosine
 from repro.runtime import train_loop
 from repro.runtime.steps import build_train_step

@@ -4,11 +4,9 @@ machinery on a small mesh."""
 import numpy as np
 import pytest
 
-import jax
 import jax.numpy as jnp
 
 from conftest import run_with_devices
-from repro.configs import ARCHS, reduced
 from repro.models.attention import chunked_attention, dense_attention
 from repro.models.ssm import (chunked_linear_attention,
                               recurrent_linear_attention)
