@@ -1,7 +1,7 @@
 """Tier-2 serving scenarios: request-level latency + deployment behavior
 measured on this host (reduced models, CPU) through ``repro.serving``.
 
-Three sweeps, the LLM-Inference-Bench (arXiv 2411.00136) metric set
+Five sweeps, the LLM-Inference-Bench (arXiv 2411.00136) metric set
 applied to the paper's Tier-2 deployment axis:
 
 * ``serving/goodput_vs_load``       — goodput + TTFT + per-token latency
@@ -11,10 +11,18 @@ applied to the paper's Tier-2 deployment axis:
   continuous batching's slot backfill shows up as strictly higher
   goodput);
 * ``serving/slot_balance``          — slot-occupancy load balance
-  (Eq. 3 over KV slots) for uniform vs skewed budget mixes.
+  (Eq. 3 over KV slots) for uniform vs skewed budget mixes;
+* ``serving/paged_vs_monolithic``   — the paged-KV engine against the
+  monolithic continuous engine at *equal KV memory budget*
+  (``SLOTS x span`` tokens) on the mixed-budget burst: paged admits
+  strictly more concurrent requests (``peak_concurrency``) because
+  admission reserves pages for actual request lengths, not whole spans;
+* ``serving/paged_page_size``       — page size x offered load sweep
+  recording page occupancy / internal fragmentation / goodput.
 
 Every record carries ``ttft_us`` (median time-to-first-token) and
-per-token ``p50_us``/``p95_us`` stamped from the decode-step samples.
+per-token ``p50_us``/``p95_us`` stamped from the decode-step samples;
+paged records add the page-pool fields from ``ServeReport.summary``.
 """
 from __future__ import annotations
 
@@ -28,6 +36,15 @@ PROMPT = 8
 SLOTS = 4
 MAX_BUDGET = 24
 N_REQ = 8
+SPAN = PROMPT + MAX_BUDGET
+# the monolithic engines' KV budget in tokens — the paged engines below
+# get a pool of exactly this many token slots (incl. the null page)
+BUDGET_TOKENS = SLOTS * SPAN
+PAGED_LANES = 8                    # decode lanes; admission is page-bound
+
+_PAGE_KEYS = ("page_size", "num_pages", "page_occupancy_mean",
+              "page_occupancy_peak", "fragmentation_mean",
+              "admission_blocked_steps")
 
 
 @functools.lru_cache(maxsize=2)
@@ -46,6 +63,24 @@ def _engine(scheduler: str):
     return eng, cfg
 
 
+@functools.lru_cache(maxsize=4)
+def _paged_engine(page_size: int):
+    """Paged engine at the monolithic engines' exact KV memory budget:
+    ``BUDGET_TOKENS // page_size`` pages total (one of which is the
+    reserved null page). More decode lanes than the monolithic SLOTS —
+    concurrency is bounded by free pages, which is the point."""
+    from repro.launch.serve import build_engine
+
+    eng, cfg = build_engine(
+        ARCH, batch=PAGED_LANES, prompt_len=PROMPT,
+        max_new_tokens=MAX_BUDGET, scheduler="paged",
+        page_size=page_size, num_pages=BUDGET_TOKENS // page_size,
+        prefill_chunk_tokens=PROMPT // 2,
+        reduce_kw=dict(layers=2, d_model=64, vocab=128, d_ff=128))
+    eng.warmup(PROMPT)
+    return eng, cfg
+
+
 def _requests(budgets, rate_per_s=0.0, n=N_REQ, seed=0):
     from repro.data.pipeline import synth_requests
 
@@ -57,21 +92,27 @@ def _requests(budgets, rate_per_s=0.0, n=N_REQ, seed=0):
 def _record(name, report) -> BenchRecord:
     s = report.summary()
     tok_us = [t * 1e6 for t in report.token_latency_samples_s()]
+    derived = {
+        "scheduler": s["scheduler"],
+        "goodput_rps": round(s["goodput_rps"], 3),
+        "goodput_tps": round(s["goodput_tps"], 1),
+        "completed": s["completed"],
+        "decode_steps": s["decode_steps"],
+        "prefills": s["prefills"],
+        "occupancy": round(s["occupancy"], 4),
+        "peak_concurrency": s["peak_concurrency"],
+        "slot_balance": round(s["slot_balance"], 4),
+        "makespan_s": round(s["makespan_s"], 5),
+    }
+    for key in _PAGE_KEYS:          # present on paged reports only
+        if key in s:
+            v = s[key]
+            derived[key] = round(v, 4) if isinstance(v, float) else v
     return BenchRecord(
         name=name,
         us_per_call=TimingStats(tok_us) if tok_us else 0.0,
         ttft_us=s["ttft_p50_s"] * 1e6,
-        derived={
-            "scheduler": s["scheduler"],
-            "goodput_rps": round(s["goodput_rps"], 3),
-            "goodput_tps": round(s["goodput_tps"], 1),
-            "completed": s["completed"],
-            "decode_steps": s["decode_steps"],
-            "prefills": s["prefills"],
-            "occupancy": round(s["occupancy"], 4),
-            "slot_balance": round(s["slot_balance"], 4),
-            "makespan_s": round(s["makespan_s"], 5),
-        })
+        derived=derived)
 
 
 @scenario(
@@ -101,6 +142,49 @@ def static_vs_continuous(wl: Workload):
     reqs = _requests(budgets=(2, MAX_BUDGET))
     report = _engine(sched)[0].run(reqs)
     yield _record(f"serving/sched_{sched}", report)
+
+
+@scenario(
+    "serving/paged_vs_monolithic",
+    tags=("tier2", "serving", "paged", "measured"),
+    paper_ref="Tier-2 deployment (KV memory management)",
+    workloads=[Workload(label="continuous", arch=ARCH,
+                        knobs={"scheduler": "continuous"}),
+               Workload(label="paged", arch=ARCH,
+                        knobs={"scheduler": "paged", "page_size": 8})])
+def paged_vs_monolithic(wl: Workload):
+    """Mixed-budget burst at equal KV memory budget (SLOTS x span
+    tokens): the monolithic engine reserves a whole span per slot and
+    caps concurrency at SLOTS; the paged engine reserves pages for
+    actual request lengths and admits strictly more requests at once
+    (``peak_concurrency``), with page occupancy / fragmentation on the
+    record. Greedy token parity between the two engines is gated
+    separately by ``tools/ci_checks.py paged-parity``."""
+    sched = wl.knobs["scheduler"]
+    reqs = _requests(budgets=(2, MAX_BUDGET))
+    if sched == "paged":
+        eng = _paged_engine(wl.knobs["page_size"])[0]
+    else:
+        eng = _engine(sched)[0]
+    yield _record(f"serving/paged_vs_mono_{sched}", eng.run(reqs))
+
+
+@scenario(
+    "serving/paged_page_size",
+    tags=("tier2", "serving", "paged", "measured"),
+    paper_ref="Tier-2 deployment (page size x offered load)",
+    workloads=[Workload(label=f"ps{ps}_load{int(r)}", arch=ARCH,
+                        knobs={"page_size": ps, "offered_rps": r})
+               for ps in (4, 16) for r in (0.0, 64.0)])
+def paged_page_size(wl: Workload):
+    """Page size x offered load over the paged engine at a fixed pool
+    budget: small pages cut internal fragmentation but grow the block
+    table; the records carry occupancy/fragmentation/goodput so the
+    trade-off is measured, not asserted."""
+    ps, rate = wl.knobs["page_size"], wl.knobs["offered_rps"]
+    reqs = _requests(budgets=(4, 12), rate_per_s=rate)
+    report = _paged_engine(ps)[0].run(reqs)
+    yield _record(f"serving/paged_ps{ps}_load{int(rate)}", report)
 
 
 @scenario(

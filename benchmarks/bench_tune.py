@@ -22,6 +22,8 @@ _ATTN_SHAPES = [("B1_S512_H4_KV2_D64", dict(B=1, S=512, Hq=4, Hkv=2, D=64))]
 _WKV_SHAPES = [("B1_T256_H2_K64", dict(B=1, T=256, H=2, K=64))]
 _NORM_SHAPES = [("r4096_d512", dict(rows=4096, d=512)),
                 ("r1024_d256", dict(rows=1024, d=256))]
+_PAGED_SHAPES = [("B4_P64_ps16_H4_KV2_D64",
+                  dict(B=4, P=64, ps=16, Hq=4, Hkv=2, D=64, npag=16))]
 
 
 def _record(kind: str, label: str, res) -> BenchRecord:
@@ -103,6 +105,36 @@ def tune_wkv6(wl: Workload):
     res = tune.tune_wkv6(q, k, v, ld, iters=2, warmup=1)
     tune.save([res])
     yield _record("wkv6", wl.label, res)
+
+
+@scenario(
+    "tune/paged_attention", tags=_TAGS + ("serving",),
+    paper_ref="guidance for perf opts",
+    workloads=[Workload(label=lbl, knobs=dict(spec))
+               for lbl, spec in _PAGED_SHAPES])
+def tune_paged_attention(wl: Workload):
+    """Sweep the paged decode-attention pages_per_block; persist winner."""
+    import numpy as np
+    import jax.numpy as jnp
+
+    from repro.bench import tune
+
+    s = wl.knobs
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal(
+        (s["B"], 1, s["Hq"], s["D"])), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal(
+        (s["P"], s["ps"], s["Hkv"], s["D"])), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal(
+        (s["P"], s["ps"], s["Hkv"], s["D"])), jnp.float32)
+    btab = jnp.asarray(rng.integers(1, s["P"], (s["B"], s["npag"])),
+                       jnp.int32)
+    lens = jnp.asarray(
+        rng.integers(1, s["npag"] * s["ps"] + 1, s["B"]), jnp.int32)
+    res = tune.tune_paged_attention(q, kp, vp, btab, lens, iters=2,
+                                    warmup=1)
+    tune.save([res])
+    yield _record("paged_attention", wl.label, res)
 
 
 @scenario(

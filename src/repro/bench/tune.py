@@ -47,6 +47,7 @@ SUBLANE = 8                    # min f32 sublane tile
 _ATTN_BLOCKS = (128, 256, 512)
 _WKV_CHUNKS = (16, 32, 64, 128, 256)
 _NORM_ROWS = (64, 128, 256, 512, 1024)
+_PAGED_PPB = (1, 2, 4, 8)
 
 
 def attention_vmem_bytes(bq: int, bk: int, D: int, itemsize: int) -> int:
@@ -70,6 +71,15 @@ def rmsnorm_vmem_bytes(br: int, d: int, itemsize: int) -> int:
     blocks = 2 * br * d * itemsize + d * 4               # x, o, scale
     f32_tmp = br * d * 4
     return 2 * blocks + f32_tmp
+
+
+def paged_vmem_bytes(ppb: int, ps: int, g: int, D: int,
+                     itemsize: int) -> int:
+    """q/o tiles plus ``pages_per_block`` double-buffered K and V page
+    DMAs; online-softmax scratch is f32."""
+    blocks = (2 * g * D + 2 * ppb * ps * D) * itemsize
+    scratch = (2 * g + g * D) * 4                        # m, l, acc
+    return 2 * blocks + scratch
 
 
 def _budget(vmem_budget: Optional[int]) -> int:
@@ -161,6 +171,29 @@ def rmsnorm_candidates(rows: int, d: int, itemsize: int,
     if default_ok:
         out.insert(0, {"block_rows": default_r})
     return out, rejected, ({"block_rows": default_r} if default_ok
+                           else None)
+
+
+def paged_candidates(n_pages: int, ps: int, g: int, D: int, itemsize: int,
+                     vmem_budget: Optional[int] = None
+                     ) -> Tuple[List[Dict[str, int]], int,
+                                Optional[Dict[str, int]]]:
+    budget = _budget(vmem_budget)
+    default_p = min(tuning.DEFAULTS["paged_attention_fwd"]
+                    ["pages_per_block"], n_pages)
+    out, rejected = [], 0
+    for ppb in _PAGED_PPB:
+        if ppb > n_pages:
+            continue
+        if paged_vmem_bytes(ppb, ps, g, D, itemsize) > budget:
+            rejected += 1
+            continue
+        if ppb != default_p:
+            out.append({"pages_per_block": ppb})
+    default_ok = paged_vmem_bytes(default_p, ps, g, D, itemsize) <= budget
+    if default_ok:
+        out.insert(0, {"pages_per_block": default_p})
+    return out, rejected, ({"pages_per_block": default_p} if default_ok
                            else None)
 
 
@@ -328,6 +361,30 @@ def tune_rmsnorm(x, scale, *, timer: Callable = timeit_us, iters: int = 3,
 
     return _sweep("rmsnorm_fwd", sig, cands, rej, dflt, make_fn,
                   (x, scale), timer, iters, warmup)
+
+
+def tune_paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                         timer: Callable = timeit_us, iters: int = 2,
+                         warmup: int = 1,
+                         vmem_budget: Optional[int] = None) -> TuneResult:
+    """Sweep the paged decode-attention ``pages_per_block``."""
+    from repro.kernels import ops
+
+    B, _, Hq, D = q.shape
+    _, ps, Hkv, _ = k_pages.shape
+    npag = block_tables.shape[1]
+    sig = tuning.paged_attention_signature(q.shape, k_pages.shape, npag,
+                                           q.dtype)
+    cands, rej, dflt = paged_candidates(npag, ps, Hq // Hkv, D,
+                                        q.dtype.itemsize, vmem_budget)
+
+    def make_fn(pages_per_block: int):
+        return functools.partial(ops.paged_decode_attention,
+                                 pages_per_block=pages_per_block)
+
+    return _sweep("paged_attention_fwd", sig, cands, rej, dflt, make_fn,
+                  (q, k_pages, v_pages, block_tables, lengths), timer,
+                  iters, warmup)
 
 
 def save(results: Sequence[TuneResult],

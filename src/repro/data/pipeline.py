@@ -115,20 +115,31 @@ class SyntheticLM:
                 * 0.02, jnp.bfloat16)
         return batch
 
-    def iterate(self, start_step: int = 0,
-                prefetch: int = 2) -> Iterator[dict]:
-        """Prefetching iterator (daemon thread + bounded queue)."""
+    def iterate(self, start_step: int = 0, prefetch: int = 2,
+                shard: int = 0, num_shards: int = 1) -> Iterator[dict]:
+        """Prefetching iterator (producer thread + bounded queue).
+
+        ``shard``/``num_shards`` reach :meth:`batch_at`, so a
+        data-parallel host materializes only its batch slice instead of
+        the full global batch. Each step's batch is built exactly once —
+        a full queue blocks the producer on ``put`` rather than
+        recomputing the batch on every retry — and closing the generator
+        joins the producer thread instead of leaving it spinning."""
         q: "queue.Queue" = queue.Queue(maxsize=prefetch)
         stop = threading.Event()
 
         def producer():
             step = start_step
             while not stop.is_set():
-                try:
-                    q.put(self.batch_at(step), timeout=0.5)
-                    step += 1
-                except queue.Full:
-                    continue
+                item = self.batch_at(step, shard=shard,
+                                     num_shards=num_shards)
+                while not stop.is_set():
+                    try:
+                        q.put(item, timeout=0.1)
+                        step += 1
+                        break
+                    except queue.Full:
+                        continue
 
         t = threading.Thread(target=producer, daemon=True)
         t.start()
@@ -137,3 +148,10 @@ class SyntheticLM:
                 yield q.get()
         finally:
             stop.set()
+            # unblock a producer stuck on a full queue, then join it
+            while not q.empty():
+                try:
+                    q.get_nowait()
+                except queue.Empty:   # producer may race the drain
+                    break
+            t.join(timeout=5.0)

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from repro.kernels import tuning
 from repro.kernels.flash_attention import (flash_attention_bwd,
                                            flash_attention_fwd)
+from repro.kernels.paged_attention import paged_attention_fwd
 from repro.kernels.rmsnorm import rmsnorm_fwd
 from repro.kernels.rwkv6 import wkv6_fwd
 
@@ -103,6 +104,25 @@ def wkv6(q, k, v, ld, u=None, initial_state=None, *,
                                  v_head=v.shape[-1], dtype=q.dtype,
                                  use_u=u is not None)
     return _wkv6_jit(q, k, v, ld, u, initial_state, chunk=c)
+
+
+@partial(jax.jit, static_argnames=("pages_per_block",))
+def _paged_attention_jit(q, k_pages, v_pages, block_tables, lengths, *,
+                         pages_per_block: int = 1):
+    return paged_attention_fwd(q, k_pages, v_pages, block_tables, lengths,
+                               pages_per_block=pages_per_block,
+                               interpret=INTERPRET)
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                           pages_per_block: int | None = None):
+    """Block-table paged decode attention (no backward: decode only).
+    pages_per_block None = auto (tuned cache -> 1)."""
+    ppb = tuning.resolve_paged_pages_per_block(
+        pages_per_block, q_shape=q.shape, pages_shape=k_pages.shape,
+        n_pages=block_tables.shape[1], dtype=q.dtype)
+    return _paged_attention_jit(q, k_pages, v_pages, block_tables, lengths,
+                                pages_per_block=ppb)
 
 
 @partial(jax.jit, static_argnames=("eps", "block_rows"))

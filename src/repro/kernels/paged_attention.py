@@ -1,0 +1,148 @@
+"""Paged decode attention — Pallas TPU kernel over a block-table KV pool.
+
+One decode token per sequence attends to its KV history stored in
+scattered fixed-size pages of a global pool (see
+:mod:`repro.serving.pages`). The physical pages are *gathered inside the
+kernel*: the per-sequence block table rides in as a scalar-prefetch SMEM
+operand, and each K/V BlockSpec's ``index_map`` reads the table to pick
+the physical page its DMA fetches — the pool never has to be gathered
+into a contiguous activation on the host side.
+
+Tiling: grid ``(B, Hkv, n_blocks)`` with the page-block dim innermost
+and sequential ("arbitrary"), so the online-softmax accumulators live in
+VMEM scratch across page blocks. The tunable tile parameter is
+``pages_per_block``: how many pages one grid step consumes. It is
+realised by passing the pool ``pages_per_block`` times with offset
+index maps — each copy is an independent page DMA the pipeline keeps in
+flight, so larger values trade VMEM for fewer grid steps. Like every
+other kernel, ``pages_per_block=None`` means "auto": resolved from the
+tuned-config cache (:mod:`repro.kernels.tuning`, populated by
+``python -m benchmarks.run --tune``), default 1.
+
+Pages logically past a sequence's length are skipped with ``pl.when``;
+their block-table entries point at the reserved null page (id 0) so even
+the skipped DMAs touch valid memory.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import tuning
+
+# jax < 0.5 ships this as TPUCompilerParams; newer releases renamed it
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(btab_ref, len_ref, q_ref, *refs, scale: float, ps: int,
+                  ppb: int, nb: int, g: int):
+    """refs = k_ref x ppb, v_ref x ppb, o_ref, m_scr, l_scr, acc_scr."""
+    k_refs = refs[:ppb]
+    v_refs = refs[ppb:2 * ppb]
+    o_ref, m_scr, l_scr, acc_scr = refs[2 * ppb:]
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[b]
+    q = q_ref[0, 0].astype(jnp.float32) * scale              # (g, D)
+    for p in range(ppb):
+        page_start = (j * ppb + p) * ps                      # logical pos
+
+        def _consume(p=p, page_start=page_start):
+            k = k_refs[p][0, :, 0, :].astype(jnp.float32)    # (ps, D)
+            v = v_refs[p][0, :, 0, :].astype(jnp.float32)
+            s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+            kpos = page_start + jax.lax.broadcasted_iota(
+                jnp.int32, (g, ps), 1)
+            s = jnp.where(kpos < length, s, NEG_INF)
+            m_prev = m_scr[...]
+            m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+            pe = jnp.exp(s - m_new)
+            corr = jnp.exp(m_prev - m_new)
+            l_scr[...] = l_scr[...] * corr + pe.sum(axis=1, keepdims=True)
+            acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+                pe, v, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            m_scr[...] = m_new
+
+        pl.when(page_start < length)(_consume)
+
+    @pl.when(j == nb - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_attention_fwd(q, k_pages, v_pages, block_tables, lengths, *,
+                        pages_per_block: int | None = None,
+                        interpret: bool = False):
+    """q: (B, 1, Hq, D); k_pages/v_pages: (P, page_size, Hkv, D);
+    block_tables: (B, n_pages) int32 physical page ids (logical order,
+    padded with the null page 0); lengths: (B,) int32 valid KV tokens.
+    Returns (B, 1, Hq, D). pages_per_block None = auto (tuned cache)."""
+    B, one, Hq, D = q.shape
+    assert one == 1, "paged decode attention takes one query token per row"
+    P, ps, Hkv, _ = k_pages.shape
+    npag = block_tables.shape[1]
+    g = Hq // Hkv
+    ppb = tuning.resolve_paged_pages_per_block(
+        pages_per_block, q_shape=q.shape, pages_shape=k_pages.shape,
+        n_pages=npag, dtype=q.dtype)
+    nb = -(-npag // ppb)                      # grid steps over page blocks
+    pad = nb * ppb - npag
+    btab = jnp.asarray(block_tables, jnp.int32)
+    if pad:
+        btab = jnp.pad(btab, ((0, 0), (0, pad)))      # null-page padding
+    lengths = jnp.asarray(lengths, jnp.int32).reshape(B)
+    qg = q.reshape(B, Hkv, g, D)              # GQA groups as a row tile
+
+    def q_map(b, h, j, bt, ln):
+        return (b, h, 0, 0)
+
+    def kv_map(p):
+        # the in-kernel gather: physical page id straight from the table
+        def index_map(b, h, j, bt, ln, p=p):
+            return (bt[b, j * ppb + p], 0, h, 0)
+        return index_map
+
+    in_specs = [pl.BlockSpec((1, 1, g, D), q_map)]
+    in_specs += [pl.BlockSpec((1, ps, 1, D), kv_map(p)) for p in range(ppb)]
+    in_specs += [pl.BlockSpec((1, ps, 1, D), kv_map(p)) for p in range(ppb)]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, nb),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, g, D), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, D), jnp.float32),
+        ],
+    )
+    kern = functools.partial(_paged_kernel, scale=1.0 / np.sqrt(D), ps=ps,
+                             ppb=ppb, nb=nb, g=g)
+    kv = (k_pages.reshape(P, ps, Hkv, D), v_pages.reshape(P, ps, Hkv, D))
+    out = pl.pallas_call(
+        kern, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, g, D), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(btab, lengths, qg, *([kv[0]] * ppb), *([kv[1]] * ppb))
+    return out.reshape(B, 1, Hq, D)

@@ -41,6 +41,7 @@ DEFAULTS: Dict[str, Dict[str, int]] = {
     "flash_attention_bwd": {"block_q": 128, "block_k": 128},
     "wkv6_fwd": {"chunk": 64},
     "rmsnorm_fwd": {"block_rows": 256},
+    "paged_attention_fwd": {"pages_per_block": 1},
 }
 
 # env-fingerprint keys that must match for a cache file to be trusted
@@ -101,6 +102,14 @@ def wkv6_signature(q_shape, v_head: int, dtype, *, use_u: bool) -> str:
 
 def rmsnorm_signature(rows: int, d: int, dtype) -> str:
     return signature(rows=int(rows), d=int(d), dtype=_dtype_name(dtype))
+
+
+def paged_attention_signature(q_shape, pages_shape, n_pages: int,
+                              dtype) -> str:
+    B, _, Hq, D = q_shape
+    P, ps, Hkv, _ = pages_shape
+    return signature(B=B, Hq=Hq, Hkv=Hkv, D=D, P=P, ps=ps,
+                     npag=int(n_pages), dtype=_dtype_name(dtype))
 
 
 # ------------------------------------------------------------------ cache
@@ -207,3 +216,17 @@ def resolve_rmsnorm_rows(block_rows: Optional[int], *, rows: int, d: int,
         return int(block_rows)
     sig = rmsnorm_signature(rows, d, dtype)
     return resolve("rmsnorm_fwd", sig)["block_rows"]
+
+
+def resolve_paged_pages_per_block(pages_per_block: Optional[int], *,
+                                  q_shape, pages_shape, n_pages: int,
+                                  dtype) -> int:
+    """Explicit > tuned > default, clamped to [1, n_pages] so any source
+    (caller, stale cache entry) yields a tiling the block table can
+    satisfy."""
+    if pages_per_block is None:
+        sig = paged_attention_signature(q_shape, pages_shape, n_pages,
+                                        dtype)
+        pages_per_block = resolve("paged_attention_fwd",
+                                  sig)["pages_per_block"]
+    return max(1, min(int(pages_per_block), int(n_pages)))

@@ -26,11 +26,15 @@ def build_engine(arch: str, *, batch: int, prompt_len: int,
                  max_new_tokens: int, scheduler: str = "continuous",
                  use_reduced: bool = True, reduce_kw=None,
                  greedy: bool = True, eos_id=None, seed: int = 0,
-                 clock=None):
+                 clock=None, page_size: int = 16, num_pages=None,
+                 prefill_chunk_tokens: int = 0):
     """Build a serving engine for ``arch`` (the launcher's plumbing,
     importable so benchmarks and tests share it). ``reduce_kw`` overrides
     the reduction sizes (layers/d_model/vocab/d_ff — the benchmarks use a
-    smaller cell than the CLI default). Returns (engine, cfg)."""
+    smaller cell than the CLI default). For ``scheduler="paged"`` the
+    engine is wired to the model's paged triple (chunked prefill + the
+    block-table decode path) and ``page_size``/``num_pages``/
+    ``prefill_chunk_tokens`` apply. Returns (engine, cfg)."""
     cfg = get_arch(arch)
     if use_reduced:
         cfg = reduced(cfg, **(reduce_kw or {}))
@@ -44,10 +48,17 @@ def build_engine(arch: str, *, batch: int, prompt_len: int,
     with set_mesh(mesh):
         prefill_fn, decode_fn, model = build_serve_steps(rcfg)
         params = model.init_params(jax.random.PRNGKey(seed))
-    engine = make_engine(scheduler, prefill_fn, decode_fn, params,
-                         model.cache_init, slots=batch, cache_span=span,
-                         eos_id=eos_id, greedy=greedy, seed=seed,
-                         clock=clock)
+    common = dict(slots=batch, cache_span=span, eos_id=eos_id,
+                  greedy=greedy, seed=seed, clock=clock)
+    if scheduler == "paged":
+        engine = make_engine(
+            scheduler, model.prefill_chunk, model.decode_step_paged,
+            params, model.paged_cache_init, page_size=page_size,
+            num_pages=num_pages,
+            prefill_chunk_tokens=prefill_chunk_tokens, **common)
+    else:
+        engine = make_engine(scheduler, prefill_fn, decode_fn, params,
+                             model.cache_init, **common)
     return engine, cfg
 
 
@@ -58,8 +69,15 @@ def main(argv=None):
                     help="KV slots (continuous) / batch size (static)")
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--max-new-tokens", type=int, default=32)
-    ap.add_argument("--scheduler", choices=("static", "continuous"),
+    ap.add_argument("--scheduler", choices=("static", "continuous", "paged"),
                     default="continuous")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV tokens per page (paged scheduler)")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="total KV pool pages incl. the null page "
+                         "(0 = match the monolithic slots*span budget)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked-prefill tokens per chunk (0 = one shot)")
     ap.add_argument("--num-requests", type=int, default=8)
     ap.add_argument("--offered-load", type=float, default=0.0,
                     help="Poisson arrival rate in req/s (0 = burst at t=0)")
@@ -75,7 +93,9 @@ def main(argv=None):
         args.arch, batch=args.batch, prompt_len=args.prompt_len,
         max_new_tokens=args.max_new_tokens, scheduler=args.scheduler,
         use_reduced=args.reduced, greedy=not args.sample,
-        eos_id=args.eos_id if args.eos_id >= 0 else None, seed=args.seed)
+        eos_id=args.eos_id if args.eos_id >= 0 else None, seed=args.seed,
+        page_size=args.page_size, num_pages=args.num_pages or None,
+        prefill_chunk_tokens=args.prefill_chunk)
     requests = synth_requests(cfg, args.num_requests, args.prompt_len,
                               max_new_tokens=args.max_new_tokens,
                               rate_per_s=args.offered_load, seed=args.seed)
@@ -93,6 +113,12 @@ def main(argv=None):
     print(f"  decode_steps={s['decode_steps']} prefills={s['prefills']} "
           f"occupancy={s['occupancy']:.2f} "
           f"slot_balance={s['slot_balance']:.2f}")
+    if s.get("num_pages"):
+        print(f"  pages={s['num_pages']}x{s['page_size']}tok "
+              f"page_occ={s['page_occupancy_mean']:.2f} "
+              f"(peak {s['page_occupancy_peak']:.2f}) "
+              f"frag={s['fragmentation_mean']:.2f} "
+              f"peak_concurrency={s['peak_concurrency']}")
     return report
 
 

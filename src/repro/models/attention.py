@@ -166,6 +166,24 @@ def decode_attention_simple(q, k_cache, v_cache, cache_len) -> jnp.ndarray:
     return o.reshape(B, 1, Hq, D)
 
 
+def paged_decode_attention_ref(q, k_pages, v_pages, block_tables,
+                               lengths) -> jnp.ndarray:
+    """Reference paged decode attention: gather the per-row pages into a
+    contiguous logical cache and reuse :func:`decode_attention_simple`.
+    q:(B,1,Hq,D); k_pages/v_pages:(P,ps,Hkv,D); block_tables:(B,npag)
+    physical page ids in logical order; lengths:(B,) valid KV tokens.
+
+    Gathered logical order == position order, so the masked positions and
+    the softmax summation order match both the monolithic decode path and
+    the Pallas kernel (which gathers inside the kernel instead)."""
+    B = q.shape[0]
+    P, ps, Hkv, D = k_pages.shape
+    npag = block_tables.shape[1]
+    k = k_pages[block_tables].reshape(B, npag * ps, Hkv, D)
+    v = v_pages[block_tables].reshape(B, npag * ps, Hkv, D)
+    return decode_attention_simple(q, k, v, lengths)
+
+
 def attention(q, k, v, *, backend: str, causal: bool, window: int = 0,
               chunk: int = 1024, block_q: int = None,
               block_k: int = None) -> jnp.ndarray:

@@ -37,6 +37,14 @@ class Model:
     prefill: Callable       # (params, batch, cache_span) -> (logits, caches)
     decode_step: Callable   # (params, caches, token_batch, pos) -> (logits, caches)
     cache_init: Callable    # (batch,max_len,dtype) -> zeroed caches
+    # paged-KV serving triple (full-attention decoder-only models; the
+    # builders raise for families without a paged path):
+    # (params, caches, tokens, block_tables, start_pos) -> (logits, caches)
+    prefill_chunk: Callable = None
+    # (params, caches, token, pos, block_tables) -> (logits, caches)
+    decode_step_paged: Callable = None
+    # (num_pages, page_size, dtype) -> zeroed paged pools
+    paged_cache_init: Callable = None
 
 
 def build(cfg: ModelConfig, rt: Runtime, param_dtype=jnp.bfloat16) -> Model:
@@ -123,19 +131,22 @@ def build(cfg: ModelConfig, rt: Runtime, param_dtype=jnp.bfloat16) -> Model:
         return logits.astype(jnp.float32)[..., :cfg.vocab_size], caches
 
     # ----------------------------------------------------------- decode
+    def _sinusoidal_at(pos):
+        """Closed-form sinusoidal position embedding at runtime ``pos``
+        (any 1-D position vector) -> (len(pos), d_model) f32."""
+        d = cfg.d_model
+        half_idx = jnp.arange(0, d, 2)
+        pos_v = jnp.atleast_1d(jnp.asarray(pos, jnp.float32))
+        ang = pos_v[:, None] / jnp.power(10000.0, half_idx / d)
+        pe = jnp.zeros((pos_v.shape[0], d), jnp.float32)
+        return pe.at[:, 0::2].set(jnp.sin(ang)).at[:, 1::2].set(jnp.cos(ang))
+
     def decode_step(params, caches, token, pos):
         """token: (B,1) i32; pos: scalar i32 (next position to write) or a
         (B,) vector of per-row positions (continuous batching)."""
         x = embed_tokens(params["embed"], token).astype(compute_dtype)
         if cfg.rope == "sinusoidal":
-            # closed-form sinusoidal position embedding at runtime `pos`
-            d = cfg.d_model
-            half_idx = jnp.arange(0, d, 2)
-            pos_v = jnp.atleast_1d(jnp.asarray(pos, jnp.float32))
-            ang = pos_v[:, None] / jnp.power(10000.0, half_idx / d)
-            pe = jnp.zeros((pos_v.shape[0], d), jnp.float32)
-            pe = pe.at[:, 0::2].set(jnp.sin(ang)).at[:, 1::2].set(jnp.cos(ang))
-            x = x + pe[:, None].astype(x.dtype)
+            x = x + _sinusoidal_at(pos)[:, None].astype(x.dtype)
         cross = caches.get("cross")
         x, new_layer_caches = tfm.stack_decode(
             params["layers"], x, caches["layers"], pos, cfg, rt,
@@ -146,6 +157,50 @@ def build(cfg: ModelConfig, rt: Runtime, param_dtype=jnp.bfloat16) -> Model:
         new_caches = dict(caches)
         new_caches["layers"] = new_layer_caches
         return logits.astype(jnp.float32)[..., :cfg.vocab_size], new_caches
+
+    # ------------------------------------------------------ paged serving
+    def prefill_chunk(params, caches, tokens, block_tables, start_pos):
+        """One chunk of a chunked prefill. tokens: (B, C) i32 at absolute
+        positions ``start_pos .. start_pos+C-1``; caches: paged pools from
+        ``paged_cache_init``; block_tables: (B, n_pages). Returns the
+        logits of the chunk's LAST position ((B, 1, V)) and the updated
+        pools — feeding the prompt chunk-by-chunk fills pages
+        incrementally and the final chunk's logits seed decoding, exactly
+        like one-shot ``prefill``."""
+        x = embed_tokens(params["embed"], tokens).astype(compute_dtype)
+        C = tokens.shape[1]
+        positions = start_pos + jnp.arange(C)
+        if cfg.rope == "sinusoidal":
+            x = x + _sinusoidal_at(positions)[None].astype(x.dtype)
+        x, new_layer = tfm.stack_prefill_chunk(
+            params["layers"], x, caches["layers"], block_tables, positions,
+            cfg, rt)
+        x_last = apply_norm(params["final_norm"], x[:, -1:], cfg.norm)
+        logits = lm_logits(params["embed"], x_last, cfg.tie_embeddings,
+                           true_vocab=cfg.vocab_size)
+        return logits.astype(jnp.float32)[..., :cfg.vocab_size], \
+            {"layers": new_layer}
+
+    def decode_step_paged(params, caches, token, pos, block_tables):
+        """token: (B,1) i32; pos: (B,) next position per row;
+        block_tables: (B, n_pages) physical page ids."""
+        x = embed_tokens(params["embed"], token).astype(compute_dtype)
+        if cfg.rope == "sinusoidal":
+            x = x + _sinusoidal_at(pos)[:, None].astype(x.dtype)
+        x, new_layer = tfm.stack_decode_paged(
+            params["layers"], x, caches["layers"], pos, block_tables, cfg,
+            rt)
+        x = apply_norm(params["final_norm"], x, cfg.norm)
+        logits = lm_logits(params["embed"], x, cfg.tie_embeddings,
+                           true_vocab=cfg.vocab_size)
+        return logits.astype(jnp.float32)[..., :cfg.vocab_size], \
+            {"layers": new_layer}
+
+    def paged_cache_init(num_pages: int, page_size: int,
+                         dtype=param_dtype):
+        return {"layers": tfm.paged_cache_init(cfg, cfg.num_layers,
+                                               num_pages, page_size,
+                                               dtype)}
 
     # ----------------------------------------------------------- caches
     def cache_init(batch: int, max_len: int, dtype=param_dtype,
@@ -165,4 +220,6 @@ def build(cfg: ModelConfig, rt: Runtime, param_dtype=jnp.bfloat16) -> Model:
 
     return Model(cfg=cfg, rt=rt, init_params=init_params, loss=loss,
                  prefill=prefill, decode_step=decode_step,
-                 cache_init=cache_init)
+                 cache_init=cache_init, prefill_chunk=prefill_chunk,
+                 decode_step_paged=decode_step_paged,
+                 paged_cache_init=paged_cache_init)

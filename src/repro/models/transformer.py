@@ -62,6 +62,9 @@ class Runtime:
     attn_block_q: Optional[int] = None
     attn_block_k: Optional[int] = None
     ssm_chunk: Optional[int] = None
+    # Paged decode attention (backend='pallas'): pages gathered per grid
+    # step. None = auto (tuned cache, see repro.kernels.tuning).
+    paged_pages_per_block: Optional[int] = None
 
 
 def _constrain(x, rt: Runtime):
@@ -304,6 +307,24 @@ def cache_init(cfg: ModelConfig, num_layers: int, batch: int, max_len: int,
     return c
 
 
+def paged_cache_init(cfg: ModelConfig, num_layers: int, num_pages: int,
+                     page_size: int, dtype) -> dict:
+    """Stacked (L, P, page_size, Hkv, D) paged KV pools. The pool is
+    global — requests own *pages* via block tables, not slots — so there
+    is no batch axis. Page 0 is the reserved null page (see
+    :mod:`repro.serving.pages`)."""
+    if (cfg.family in ("ssm", "hybrid") or cfg.attention_kind != "full"
+            or cfg.is_enc_dec):
+        raise ValueError(
+            "paged KV serving supports full-attention decoder-only "
+            f"models; got family={cfg.family!r}, "
+            f"attention_kind={cfg.attention_kind!r}, "
+            f"enc_dec={cfg.is_enc_dec}")
+    hd, nkv = cfg.resolved_head_dim, cfg.num_kv_heads
+    shape = (num_layers, num_pages, page_size, nkv, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
 # ================================================================== decode
 def layer_decode(p, x, cache, pos, cfg: ModelConfig, rt: Runtime,
                  cross_cache=None):
@@ -432,6 +453,114 @@ def layer_decode(p, x, cache, pos, cfg: ModelConfig, rt: Runtime,
     else:
         h = apply_mlp(p["mlp"], h_in, cfg.activation)
     return x + h, new_cache
+
+
+def _paged_attend(q, k_pool, v_pool, block_tables, lengths, rt: Runtime):
+    """Backend switch for block-table attention: the Pallas kernel (with
+    its in-kernel page gather) for backend='pallas', the gather-then-
+    decode_attention_simple reference everywhere else."""
+    if rt.attention_backend == "pallas":
+        from repro.kernels import ops as kops
+        return kops.paged_decode_attention(
+            q, k_pool, v_pool, block_tables, lengths,
+            pages_per_block=rt.paged_pages_per_block)
+    return attn_mod.paged_decode_attention_ref(q, k_pool, v_pool,
+                                               block_tables, lengths)
+
+
+def layer_decode_paged(p, x, cache, pos, block_tables, cfg: ModelConfig,
+                       rt: Runtime):
+    """Single-token step against the paged KV pool. x: (B,1,d); cache:
+    this layer's {"k","v"} pools (P, page_size, Hkv, D) — no batch axis;
+    pos: (B,) per-row positions; block_tables: (B, n_pages) physical page
+    ids in logical order (retired rows all-null). Each row writes its new
+    K/V at (table[pos // page_size], pos % page_size) — rows own disjoint
+    pages, so the scatter never races."""
+    pos = jnp.asarray(pos)
+    h_in = apply_norm(p["norm1"], x, cfg.norm)
+    q, k, v = attn_mod.project_qkv(p["attn"], h_in, h_in, cfg)
+    pos_b = jnp.broadcast_to(pos.reshape(-1, 1), (x.shape[0], 1))
+    q, k = _rope_q_k(cfg, q, k, pos_b if cfg.rope != "mrope" else
+                     jnp.broadcast_to(pos_b[:, None], (x.shape[0], 3, 1)))
+    ps = cache["k"].shape[1]
+    bidx = jnp.arange(x.shape[0])
+    pages = block_tables[bidx, pos // ps]
+    offs = pos % ps
+    k_pool = cache["k"].at[pages, offs].set(k[:, 0])
+    v_pool = cache["v"].at[pages, offs].set(v[:, 0])
+    o = _paged_attend(q, k_pool, v_pool, block_tables, pos + 1, rt)
+    x = x + o.reshape(*x.shape[:-1], -1) @ p["attn"]["wo"]
+    h_in = apply_norm(p["norm2"], x, cfg.norm)
+    if cfg.moe is not None:
+        h, _ = moe_mod.moe_ffn(p["moe"], h_in, cfg, rt)
+    else:
+        h = apply_mlp(p["mlp"], h_in, cfg.activation)
+    return x + h, {"k": k_pool, "v": v_pool}
+
+
+def stack_decode_paged(stacked, x, caches, pos, block_tables,
+                       cfg: ModelConfig, rt: Runtime):
+    """Scan paged decode over layers; block tables are shared across
+    layers (one logical address space, L physical pools)."""
+
+    def body(carry, xs):
+        p_layer, cache = xs
+        y, new_cache = layer_decode_paged(p_layer, carry, cache, pos,
+                                          block_tables, cfg, rt)
+        return y, new_cache
+
+    return jax.lax.scan(body, x, (stacked, caches))
+
+
+def layer_prefill_chunk(p, x, cache, block_tables, positions,
+                        cfg: ModelConfig, rt: Runtime):
+    """Chunked-prefill layer step: write this chunk's K/V into the paged
+    pool, then attend causally over the *gathered* logical history (pages
+    written by earlier chunks plus this one). x: (B, C, d); positions:
+    (C,) absolute token positions of the chunk.
+
+    The chunk is small and prefill is compute-bound, so the gather runs
+    outside any kernel and the scores go through ``dense_attention`` with
+    ``q_offset`` — the same masked-softmax math as the one-shot prefill,
+    summed in the same (logical-position) order."""
+    h_in = apply_norm(p["norm1"], x, cfg.norm)
+    q, k, v = attn_mod.project_qkv(p["attn"], h_in, h_in, cfg)
+    q, k = _rope_q_k(cfg, q, k, positions[None] if cfg.rope != "mrope"
+                     else jnp.broadcast_to(positions[None, None],
+                                           (1, 3, positions.shape[0])))
+    B, C = x.shape[0], x.shape[1]
+    ps = cache["k"].shape[1]
+    npag = block_tables.shape[1]
+    pages = jnp.take(block_tables, positions // ps, axis=1)     # (B, C)
+    offs = jnp.broadcast_to((positions % ps)[None], (B, C))
+    k_pool = cache["k"].at[pages, offs].set(k)
+    v_pool = cache["v"].at[pages, offs].set(v)
+    k_all = k_pool[block_tables].reshape(B, npag * ps, *k.shape[2:])
+    v_all = v_pool[block_tables].reshape(B, npag * ps, *v.shape[2:])
+    o = attn_mod.dense_attention(q, k_all, v_all, causal=True,
+                                 q_offset=positions[0])
+    x = x + o.reshape(*x.shape[:-1], -1) @ p["attn"]["wo"]
+    h_in = apply_norm(p["norm2"], x, cfg.norm)
+    if cfg.moe is not None:
+        h, _ = moe_mod.moe_ffn(p["moe"], h_in, cfg, rt)
+    else:
+        h = apply_mlp(p["mlp"], h_in, cfg.activation)
+    return x + h, {"k": k_pool, "v": v_pool}
+
+
+def stack_prefill_chunk(stacked, x, caches, block_tables, positions,
+                        cfg: ModelConfig, rt: Runtime):
+    """Scan one prompt chunk through the layer stack, threading the paged
+    pools as scan xs/ys."""
+
+    def body(carry, xs):
+        p_layer, cache = xs
+        y, new_cache = layer_prefill_chunk(p_layer, carry, cache,
+                                           block_tables, positions, cfg,
+                                           rt)
+        return y, new_cache
+
+    return jax.lax.scan(body, x, (stacked, caches))
 
 
 def stack_decode(stacked, x, caches, pos, cfg: ModelConfig, rt: Runtime,

@@ -45,15 +45,26 @@ def _accepts_cache_span(prefill: Callable) -> bool:
 
 @dataclass
 class ServeResult:
-    tokens: np.ndarray           # (B, steps)
+    tokens: np.ndarray           # (B, max_new_tokens)
     prefill_s: float
     decode_s: float
     tokens_per_s: float
+    # tokens each row actually generated: max_new_tokens, or less when
+    # eos_id terminated the row early (trailing tokens are dead weight
+    # the lockstep batch still decoded — and still paid for in time, but
+    # they are NOT counted as throughput)
+    new_tokens: Optional[np.ndarray] = None
+
+    @property
+    def total_new_tokens(self) -> int:
+        if self.new_tokens is None:
+            return int(np.prod(self.tokens.shape))
+        return int(self.new_tokens.sum())
 
 
 def generate(prefill: Callable, decode_step: Callable, params, batch: dict,
              *, prompt_len: int, max_new_tokens: int,
-             cache_span: Optional[int] = None,
+             cache_span: Optional[int] = None, eos_id: Optional[int] = None,
              greedy: bool = True, seed: int = 0) -> ServeResult:
     """Prefill ``batch`` then decode ``max_new_tokens`` lockstep tokens.
 
@@ -64,7 +75,17 @@ def generate(prefill: Callable, decode_step: Callable, params, batch: dict,
     first, and tokens accumulate on device with a single host transfer
     after the loop, so decode dispatch is never serialized on a per-token
     ``np.asarray`` sync.
+
+    ``max_new_tokens`` must be >= 1. At exactly 1 the first (prefill-
+    sampled) token is the whole output: no decode step runs and
+    ``decode_s`` is 0 rather than the timing of an empty loop.
+    ``tokens_per_s`` counts tokens actually generated — rows that hit
+    ``eos_id`` early contribute only their live prefix, not the full
+    ``max_new_tokens`` they idled through.
     """
+    if max_new_tokens < 1:
+        raise ValueError(
+            f"max_new_tokens must be >= 1, got {max_new_tokens}")
     span = cache_span or (prompt_len + max_new_tokens)
     t0 = time.perf_counter()
     if _accepts_cache_span(prefill):
@@ -73,18 +94,26 @@ def generate(prefill: Callable, decode_step: Callable, params, batch: dict,
         logits, caches = prefill(params, batch)
     logits = jax.block_until_ready(logits)
     prefill_s = time.perf_counter() - t0
-    B = logits.shape[0]
     key = jax.random.PRNGKey(seed)
     if greedy:
         tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
     else:                        # the first token is sampled like the rest
         key, sub = jax.random.split(key)
         tok = jax.random.categorical(sub, logits[:, -1:]).astype(jnp.int32)
-    t0 = time.perf_counter()
-    toks, caches, _ = decode_lockstep(
-        decode_step, params, caches, tok, start_pos=prompt_len,
-        steps=max_new_tokens - 1, greedy=greedy, key=key)
-    decode_s = time.perf_counter() - t0
+    if max_new_tokens == 1:      # no decode phase: prefill made the token
+        toks, decode_s = np.asarray(jax.block_until_ready(tok)), 0.0
+    else:
+        t0 = time.perf_counter()
+        toks, caches, _ = decode_lockstep(
+            decode_step, params, caches, tok, start_pos=prompt_len,
+            steps=max_new_tokens - 1, greedy=greedy, key=key)
+        decode_s = time.perf_counter() - t0
+    new_tokens = np.full(toks.shape[0], max_new_tokens, np.int64)
+    if eos_id is not None:
+        hit = toks == eos_id
+        new_tokens = np.where(hit.any(axis=1),
+                              hit.argmax(axis=1) + 1, new_tokens)
     return ServeResult(tokens=toks, prefill_s=prefill_s, decode_s=decode_s,
-                       tokens_per_s=B * max_new_tokens / max(
-                           prefill_s + decode_s, 1e-9))
+                       tokens_per_s=int(new_tokens.sum()) / max(
+                           prefill_s + decode_s, 1e-9),
+                       new_tokens=new_tokens)

@@ -1,24 +1,31 @@
 """repro.serving — request-level serving: schedulers, slots, metrics.
 
 The Tier-2 deployment subsystem: :class:`Request` streams in,
-:class:`StaticEngine` (lockstep batches) or :class:`ContinuousEngine`
-(slot-based continuous batching) schedules them onto the jitted
+:class:`StaticEngine` (lockstep batches), :class:`ContinuousEngine`
+(slot-based continuous batching), or :class:`PagedEngine` (continuous
+batching over a block-table paged KV pool, see
+:mod:`repro.serving.pages`) schedules them onto the jitted
 prefill/decode steps, and :class:`ServeReport` carries the measured
-TTFT / per-token latency / goodput / slot-occupancy out to the
-benchmarks.
+TTFT / per-token latency / goodput / slot-occupancy / page-pool metrics
+out to the benchmarks.
 """
 from repro.serving.engine import (SCHEDULERS, ContinuousEngine,
                                   StaticEngine, decode_lockstep,
                                   make_engine)
+from repro.serving.paged import PagedEngine
+from repro.serving.pages import PageAllocator, pages_needed
 from repro.serving.request import (Request, RequestMetrics, ServeReport,
                                    SimClock, WallClock)
 
 __all__ = [
     "SCHEDULERS",
     "ContinuousEngine",
+    "PagedEngine",
+    "PageAllocator",
     "StaticEngine",
     "decode_lockstep",
     "make_engine",
+    "pages_needed",
     "Request",
     "RequestMetrics",
     "ServeReport",

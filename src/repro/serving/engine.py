@@ -114,6 +114,15 @@ class _EngineBase:
         self.clock = clock or WallClock()
         self.prompt_to_batch = prompt_to_batch
         self._decode_fn = decode_fn
+        # buffer donation is a no-op on CPU and only triggers warnings
+        self._donate_ok = jax.default_backend() != "cpu"
+        self._setup_jits(prefill_fn, decode_fn)
+
+    def _setup_jits(self, prefill_fn, decode_fn) -> None:
+        """Build the jitted entry points (the paged engine overrides this:
+        its prefill/decode callables carry block tables instead of a
+        monolithic batch)."""
+        greedy = self.greedy
 
         def prefill_sample(params, batch, cache_span, key):
             logits, caches = prefill_fn(params, batch, cache_span)
@@ -122,22 +131,33 @@ class _EngineBase:
         # cache_span is static: jit specializes per (prompt_len, span);
         # first-token sampling is fused in so admission is one dispatch
         self._jit_prefill = jax.jit(prefill_sample, static_argnums=(2,))
-        # buffer donation is a no-op on CPU and only triggers warnings
-        self._donate_ok = jax.default_backend() != "cpu"
         self._jit_decode = jax.jit(
             decode_fn, donate_argnums=(1,) if self._donate_ok else ())
 
-    # ---- helpers shared by both schedulers
+    # ---- helpers shared by all schedulers
+    def admission_error(self, r: Request) -> Optional[str]:
+        """Why ``r`` can NEVER be served by this engine (None = servable).
+
+        The single validation hook every scheduler routes through, so
+        rejection is *symmetric*: static, continuous, and paged engines
+        refuse the same impossible requests with the same message —
+        rather than one scheduler raising while another admits the
+        request and silently corrupts slot state past its capacity. The
+        paged engine overrides this with its page-pool capacity check."""
+        if r.max_new_tokens < 1:
+            return f"max_new_tokens must be >= 1, got {r.max_new_tokens}"
+        if r.prompt_len + r.max_new_tokens > self.cache_span:
+            return (f"prompt_len + max_new_tokens "
+                    f"({r.prompt_len}+{r.max_new_tokens}) exceeds "
+                    f"cache_span {self.cache_span}")
+        return None
+
     def _validate(self, requests: Sequence[Request]) -> List[Request]:
         reqs = sorted(requests, key=lambda r: (r.arrival_s, r.rid))
         for r in reqs:
-            if r.max_new_tokens < 1:
-                raise ValueError(f"request {r.rid}: max_new_tokens < 1")
-            if r.prompt_len + r.max_new_tokens > self.cache_span:
-                raise ValueError(
-                    f"request {r.rid}: prompt_len + max_new_tokens "
-                    f"({r.prompt_len}+{r.max_new_tokens}) exceeds cache_span "
-                    f"{self.cache_span}")
+            err = self.admission_error(r)
+            if err:
+                raise ValueError(f"request {r.rid}: {err}")
         return reqs
 
     def _prefill_one_batch(self, prompts: np.ndarray, key):
@@ -183,7 +203,7 @@ class StaticEngine(_EngineBase):
             r.rid: RequestMetrics(rid=r.rid, prompt_len=r.prompt_len,
                                   arrival_s=r.arrival_s) for r in reqs}
         slot_tokens = np.zeros(B, np.int64)
-        decode_steps = prefills = 0
+        decode_steps = prefills = peak_conc = 0
 
         for start in range(0, len(reqs), B):
             chunk = reqs[start:start + B]
@@ -207,6 +227,7 @@ class StaticEngine(_EngineBase):
             key, sub = jax.random.split(key)
             tok0, caches = self._prefill_one_batch(prompts, sub)
             prefills += 1
+            peak_conc = max(peak_conc, len(chunk))
             t_first = clock.now() - t0
             budget_max = max(r.max_new_tokens for r in chunk)
             key, sub = jax.random.split(key)
@@ -233,7 +254,8 @@ class StaticEngine(_EngineBase):
                            scheduler=self.scheduler, slots=B,
                            makespan_s=clock.now() - t0,
                            decode_steps=decode_steps, prefills=prefills,
-                           slot_tokens=slot_tokens)
+                           slot_tokens=slot_tokens,
+                           peak_concurrency=peak_conc)
 
 
 # -------------------------------------------------------------- continuous
@@ -331,7 +353,7 @@ class ContinuousEngine(_EngineBase):
         slot_rid: List[Optional[int]] = [None] * B
         active_host = np.zeros(B, bool)
         slot_tokens = np.zeros(B, np.int64)
-        decode_steps = prefills = 0
+        decode_steps = prefills = peak_conc = 0
 
         while queue or active_host.any():
             # ---- admission: free slot + arrived request -> prefill into it
@@ -346,6 +368,10 @@ class ContinuousEngine(_EngineBase):
                 tok0, one = self._prefill_one_batch(
                     np.asarray(req.prompt, np.int32)[None, :], sub)
                 prefills += 1
+                # the admitted request holds its slot's KV from here even
+                # if it finishes on its first token — count it, matching
+                # the paged engine's owner-based accounting
+                peak_conc = max(peak_conc, int(active_host.sum()) + 1)
                 m.first_token_s = clock.now() - t0
                 m.new_tokens = 1
                 # the first token only crosses to the host when the
@@ -394,7 +420,8 @@ class ContinuousEngine(_EngineBase):
                            scheduler=self.scheduler, slots=B,
                            makespan_s=clock.now() - t0,
                            decode_steps=decode_steps, prefills=prefills,
-                           slot_tokens=slot_tokens)
+                           slot_tokens=slot_tokens,
+                           peak_concurrency=peak_conc)
 
 
 SCHEDULERS = {"static": StaticEngine, "continuous": ContinuousEngine}
@@ -402,6 +429,10 @@ SCHEDULERS = {"static": StaticEngine, "continuous": ContinuousEngine}
 
 def make_engine(scheduler: str, prefill_fn, decode_fn, params, cache_init,
                 **kw) -> _EngineBase:
+    if scheduler not in SCHEDULERS:
+        # the paged engine registers itself on import (kept out of this
+        # module to avoid a circular import with repro.serving.paged)
+        import repro.serving.paged  # noqa: F401
     try:
         cls = SCHEDULERS[scheduler]
     except KeyError:

@@ -1,0 +1,292 @@
+"""Paged-KV continuous batching: block-table scheduling over a page pool.
+
+:class:`PagedEngine` keeps the continuous scheduler's slot semantics (a
+fixed number of *decode lanes*) but replaces the per-slot monolithic
+``cache_span`` KV reservation with a global pool of fixed-size pages
+(:mod:`repro.serving.pages`):
+
+* **admission** is gated on *enough free pages* for
+  ``prompt_len + max_new_tokens`` tokens — not on a whole span — so at
+  equal KV memory budget the paged engine admits strictly more
+  concurrent requests whenever real requests are shorter than the span;
+* **prefill is chunked**: the prompt streams through
+  ``prefill_chunk_tokens``-sized chunks, each writing its K/V straight
+  into the request's pages, so a long prompt never needs one contiguous
+  span-sized buffer;
+* **decode** runs the same fused pool step as the continuous engine,
+  but through the block-table paged decode path
+  (``model.decode_step_paged`` -> the Pallas paged-attention kernel on
+  TPU, the gather reference elsewhere); retirement returns pages to the
+  allocator's free list mid-stream.
+
+Greedy outputs are token-identical to the monolithic engines — paging is
+a memory-layout change, not a numerics change — which is the correctness
+gate ``tools/ci_checks.py paged-parity`` enforces.
+
+Unlike the monolithic engines' ``(prefill_fn, decode_fn, cache_init)``
+triple, this engine takes the *paged* triple from
+:class:`repro.models.model.Model`:
+
+* ``prefill_fn(params, caches, tokens, block_tables, start_pos)``
+  (= ``model.prefill_chunk``),
+* ``decode_fn(params, caches, token, pos, block_tables)``
+  (= ``model.decode_step_paged``),
+* ``cache_init(num_pages, page_size)`` (= ``model.paged_cache_init``).
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.serving.engine import SCHEDULERS, _EngineBase, _sample_tokens
+from repro.serving.pages import PageAllocator, PoolStats, pages_needed
+from repro.serving.request import Request, RequestMetrics, ServeReport
+
+
+class PagedEngine(_EngineBase):
+    """Continuous batching over ``slots`` decode lanes and a paged KV
+    pool of ``num_pages`` pages of ``page_size`` tokens (page 0 is the
+    reserved null page). ``num_pages=None`` sizes the pool to the
+    monolithic engine's budget (``slots x cache_span`` tokens) plus the
+    null page, so the default is budget-equivalent by construction;
+    benchmarks pass an explicit pool to compare at exactly equal bytes.
+    ``prefill_chunk_tokens=0`` prefills each prompt in one chunk."""
+
+    scheduler = "paged"
+
+    def __init__(self, prefill_fn, decode_fn, params, cache_init, *,
+                 slots: int, cache_span: int, page_size: int = 16,
+                 num_pages: Optional[int] = None,
+                 prefill_chunk_tokens: int = 0, **kw):
+        self.page_size = int(page_size)
+        # block-table width: logical pages a maximal request can touch
+        self.npag_max = -(-cache_span // self.page_size)
+        if num_pages is None:
+            # default: every lane can hold a maximal request at once —
+            # the monolithic slots*span budget, rounded up to whole pages
+            num_pages = slots * self.npag_max + 1
+        self.num_pages = int(num_pages)
+        self.prefill_chunk_tokens = int(prefill_chunk_tokens)
+        super().__init__(prefill_fn, decode_fn, params, cache_init,
+                         slots=slots, cache_span=cache_span, **kw)
+
+    @property
+    def usable_pages(self) -> int:
+        return self.num_pages - 1            # minus the null page
+
+    # --------------------------------------------------------- validation
+    def admission_error(self, r: Request) -> Optional[str]:
+        err = super().admission_error(r)     # budget >= 1, block-table fit
+        if err:
+            return err
+        need = pages_needed(r.prompt_len + r.max_new_tokens, self.page_size)
+        if need > self.usable_pages:
+            return (f"needs {need} KV pages ({r.prompt_len}+"
+                    f"{r.max_new_tokens} tokens at page_size "
+                    f"{self.page_size}) but the pool has only "
+                    f"{self.usable_pages} usable pages")
+        return None
+
+    # --------------------------------------------------------------- jits
+    def _setup_jits(self, prefill_fn, decode_fn) -> None:
+        donate = self._donate_ok
+        # one compile per chunk length; start_pos stays traced
+        self._jit_chunk = jax.jit(
+            prefill_fn, donate_argnums=(1,) if donate else ())
+        greedy, eos_id = self.greedy, self.eos_id
+
+        def pool_step(params, caches, state, key):
+            logits, caches = decode_fn(params, caches, state["tok"],
+                                       state["pos"], state["btab"])
+            tok = _sample_tokens(logits[:, -1], key, greedy)      # (B,)
+            active = state["active"]
+            ncount = state["ncount"]
+            B, T = state["tokbuf"].shape
+            bidx = jnp.arange(B)
+            idx = jnp.minimum(ncount, T - 1)
+            cur = state["tokbuf"][bidx, idx]
+            tokbuf = state["tokbuf"].at[bidx, idx].set(
+                jnp.where(active, tok, cur))
+            ncount = ncount + active.astype(jnp.int32)
+            stop = ncount >= state["budget"]
+            if eos_id is not None:
+                stop = stop | (tok == eos_id)
+            still = active & ~stop
+            return caches, {
+                "tok": jnp.where(active, tok, state["tok"][:, 0])[:, None],
+                "pos": state["pos"] + active.astype(jnp.int32),
+                "active": still,
+                "ncount": ncount,
+                "budget": state["budget"],
+                "tokbuf": tokbuf,
+                # retired rows point at the null page so a stale table
+                # can never write into a page the allocator reissued
+                "btab": jnp.where(still[:, None], state["btab"], 0),
+            }
+
+        def admit(state, tok0, btab_row, slot, plen, budget, active0):
+            # no cache insertion: chunked prefill already wrote this
+            # request's K/V into its own pages of the shared pool
+            t0 = tok0[0, 0]
+            return {
+                "tok": state["tok"].at[slot, 0].set(t0),
+                "pos": state["pos"].at[slot].set(plen),
+                "active": state["active"].at[slot].set(active0),
+                "ncount": state["ncount"].at[slot].set(1),
+                "budget": state["budget"].at[slot].set(budget),
+                "tokbuf": state["tokbuf"].at[slot, 0].set(t0),
+                "btab": state["btab"].at[slot].set(btab_row),
+            }
+
+        self._pool_step = jax.jit(
+            pool_step, donate_argnums=(1, 2) if donate else ())
+        self._admit = jax.jit(
+            admit, donate_argnums=(0,) if donate else ())
+
+    # ---------------------------------------------------------- prefill
+    def _chunked_prefill(self, prompt: np.ndarray, btab_dev, clock):
+        """Stream the prompt through the pool in page-filling chunks;
+        returns the last chunk's logits and the number of chunks run.
+
+        Each chunk sees only the first ``pages_needed(written)`` pages of
+        the block table, so attention cost grows with the live prefix
+        rather than paying the full cache_span gather on every chunk
+        (one jit compile per distinct (chunk length, live pages) pair)."""
+        plen = int(prompt.shape[0])
+        cs = self.prefill_chunk_tokens or plen
+        logits = None
+        chunks = 0
+        for start in range(0, plen, cs):
+            end = min(start + cs, plen)
+            n_live = pages_needed(end, self.page_size)
+            chunk = jnp.asarray(prompt[None, start:end])
+            logits, self._caches = self._jit_chunk(
+                self.params, self._caches, chunk, btab_dev[:, :n_live],
+                jnp.int32(start))
+            jax.block_until_ready(logits)
+            clock.charge("prefill")     # each chunk is a prefill dispatch
+            chunks += 1
+        return logits, chunks
+
+    # -------------------------------------------------------------- run
+    def run(self, requests: Sequence[Request]) -> ServeReport:
+        reqs = self._validate(requests)
+        B = self.slots
+        clock = self.clock
+        t0 = clock.now()
+        key = jax.random.PRNGKey(self.seed)
+        T = self.cache_span
+        self._caches = self.cache_init(self.num_pages, self.page_size)
+        alloc = PageAllocator(self.num_pages, self.page_size)
+        stats = PoolStats()
+        state = {
+            "tok": jnp.zeros((B, 1), jnp.int32),
+            "pos": jnp.zeros((B,), jnp.int32),
+            "active": jnp.zeros((B,), bool),
+            "ncount": jnp.zeros((B,), jnp.int32),
+            "budget": jnp.ones((B,), jnp.int32),
+            "tokbuf": jnp.zeros((B, T), jnp.int32),
+            "btab": jnp.zeros((B, self.npag_max), jnp.int32),
+        }
+        metrics: Dict[int, RequestMetrics] = {
+            r.rid: RequestMetrics(rid=r.rid, prompt_len=r.prompt_len,
+                                  arrival_s=r.arrival_s) for r in reqs}
+        plen_of = {r.rid: r.prompt_len for r in reqs}
+        queue = deque(reqs)
+        slot_rid: List[Optional[int]] = [None] * B
+        active_host = np.zeros(B, bool)
+        slot_tokens = np.zeros(B, np.int64)
+        decode_steps = prefills = peak_conc = blocked = 0
+
+        while queue or active_host.any():
+            # ---- admission: free lane + arrived request + enough pages
+            while (queue and not active_host.all()
+                   and t0 + queue[0].arrival_s <= clock.now()):
+                req = queue[0]
+                if not alloc.can_fit(req.prompt_len + req.max_new_tokens):
+                    blocked += 1     # FIFO head waits for retirements
+                    break
+                queue.popleft()
+                slot = int(np.flatnonzero(~active_host)[0])
+                m = metrics[req.rid]
+                m.admitted_s = clock.now() - t0
+                m.slot = slot
+                pages = alloc.allocate(req.rid,
+                                       req.prompt_len + req.max_new_tokens)
+                peak_conc = max(peak_conc, alloc.num_owners)
+                btab_row = np.zeros(self.npag_max, np.int32)
+                btab_row[:len(pages)] = pages
+                btab_dev = jnp.asarray(btab_row)[None]
+                logits, chunks = self._chunked_prefill(
+                    np.asarray(req.prompt, np.int32), btab_dev, clock)
+                prefills += chunks
+                key, sub = jax.random.split(key)
+                tok0 = _sample_tokens(logits[:, -1:], sub, self.greedy)
+                m.first_token_s = clock.now() - t0
+                m.new_tokens = 1
+                done0 = req.max_new_tokens == 1
+                if self.eos_id is not None:
+                    done0 = done0 or int(tok0[0, 0]) == self.eos_id
+                state = self._admit(state, tok0, btab_dev[0], slot,
+                                    req.prompt_len, req.max_new_tokens,
+                                    not done0)
+                slot_tokens[slot] += 1
+                if done0:
+                    m.finished = True
+                    m.finish_s = m.first_token_s
+                    m.tokens = np.asarray([int(tok0[0, 0])], np.int32)
+                    alloc.free(req.rid)
+                else:
+                    active_host[slot] = True
+                    slot_rid[slot] = req.rid
+            if not active_host.any():
+                if queue:          # pool idle until the next arrival
+                    clock.wait_until(t0 + queue[0].arrival_s)
+                    continue
+                break
+            # ---- one decode step over all lanes
+            t_step = clock.now()
+            key, sub = jax.random.split(key)
+            self._caches, state = self._pool_step(self.params, self._caches,
+                                                  state, sub)
+            jax.block_until_ready(state["active"])
+            clock.charge("decode")
+            dur = clock.now() - t_step
+            decode_steps += 1
+            new_active = np.asarray(state["active"])
+            ncounts = np.asarray(state["ncount"])
+            for s in np.flatnonzero(active_host):
+                m = metrics[slot_rid[s]]
+                m.token_latencies_s.append(dur)
+                m.new_tokens = int(ncounts[s])
+                slot_tokens[s] += 1
+                if not new_active[s]:         # EOS or budget: free pages
+                    m.finished = True
+                    m.finish_s = clock.now() - t0
+                    m.tokens = np.asarray(state["tokbuf"][s, :m.new_tokens])
+                    alloc.free(slot_rid[s])
+                    slot_rid[s] = None
+            active_host = new_active.copy()
+            live = sum(plen_of[slot_rid[s]] + int(ncounts[s])
+                       for s in np.flatnonzero(active_host))
+            stats.sample(alloc, live)
+        self._caches = None          # free the pool between runs
+        return ServeReport(
+            metrics=[metrics[r.rid] for r in reqs],
+            scheduler=self.scheduler, slots=B,
+            makespan_s=clock.now() - t0, decode_steps=decode_steps,
+            prefills=prefills, slot_tokens=slot_tokens,
+            peak_concurrency=peak_conc, page_size=self.page_size,
+            num_pages=self.num_pages,
+            page_occupancy_mean=stats.occupancy_mean,
+            page_occupancy_peak=stats.occupancy_peak,
+            fragmentation_mean=stats.fragmentation_mean,
+            admission_blocked_steps=blocked)
+
+
+SCHEDULERS["paged"] = PagedEngine

@@ -1,0 +1,175 @@
+"""Paged KV-cache memory management: a global pool of fixed-size pages.
+
+The monolithic engines reserve one contiguous ``cache_span``-sized KV
+region per slot, so KV memory is ``slots x cache_span`` tokens no matter
+how long the admitted requests actually are. This module is the
+vLLM-style alternative: the KV cache is a pool of ``num_pages`` pages of
+``page_size`` tokens each, every request owns a *block table* (logical
+page index -> physical page id), and admission is gated on free pages
+rather than free slots' worth of span.
+
+Only host-side bookkeeping lives here — the device-side pool tensors and
+the block-table-driven attention are in :mod:`repro.models.transformer`
+and :mod:`repro.kernels.paged_attention`. The allocator is the source of
+truth for the paper-facing memory metrics the benchmarks record:
+
+* **occupancy**    — allocated pages / usable pages (Eq.-1-style
+  allocation ratio applied to KV memory);
+* **fragmentation** — 1 - live tokens / (allocated pages x page_size):
+  the *internal* fragmentation of partially-filled last pages (paging's
+  only waste; the monolithic layout instead wastes the whole unused tail
+  of every span).
+
+Page 0 is reserved as the *null page*: retired decode slots and padded
+block-table entries point at it, so masked lanes always gather valid
+memory and a freed page can be handed to a new request without ever
+being written through a stale table.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Sequence
+
+NULL_PAGE = 0
+
+
+def pages_needed(tokens: int, page_size: int) -> int:
+    """Pages required to hold ``tokens`` KV entries (ceil division)."""
+    if tokens <= 0:
+        return 0
+    return -(-tokens // page_size)
+
+
+@dataclass
+class PageAllocator:
+    """Free-list allocator over a fixed pool of KV pages.
+
+    ``num_pages`` counts the whole device pool *including* the reserved
+    null page, so "equal memory budget" comparisons against a monolithic
+    engine can equate ``num_pages * page_size`` with ``slots x span``
+    directly. The free list is LIFO: the most recently retired request's
+    pages are re-issued first (warm-cache reuse, and what the free-list
+    reuse test pins down).
+    """
+
+    num_pages: int
+    page_size: int
+    reserved: int = 1               # page ids [0, reserved) never issued
+
+    def __post_init__(self) -> None:
+        if self.page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {self.page_size}")
+        if self.num_pages <= self.reserved:
+            raise ValueError(
+                f"num_pages {self.num_pages} leaves no usable pages after "
+                f"reserving {self.reserved}")
+        self._free: List[int] = list(
+            range(self.num_pages - 1, self.reserved - 1, -1))
+        self._owned: Dict[int, List[int]] = {}      # owner -> page ids
+        self.high_water = 0                         # peak pages in use
+        self.failed_allocs = 0
+
+    # ------------------------------------------------------------ queries
+    @property
+    def usable_pages(self) -> int:
+        return self.num_pages - self.reserved
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_used(self) -> int:
+        return self.usable_pages - len(self._free)
+
+    @property
+    def num_owners(self) -> int:
+        return len(self._owned)
+
+    def pages_needed(self, tokens: int) -> int:
+        return pages_needed(tokens, self.page_size)
+
+    def can_fit(self, tokens: int) -> bool:
+        return self.pages_needed(tokens) <= self.num_free
+
+    @property
+    def occupancy(self) -> float:
+        """Allocated fraction of the usable pool."""
+        return self.num_used / max(self.usable_pages, 1)
+
+    def fragmentation(self, live_tokens: int) -> float:
+        """Internal fragmentation: allocated-but-unfilled token slots as a
+        fraction of allocated capacity (0 when nothing is allocated)."""
+        cap = self.num_used * self.page_size
+        if cap <= 0:
+            return 0.0
+        return max(0.0, 1.0 - live_tokens / cap)
+
+    # -------------------------------------------------------- allocation
+    def allocate(self, owner: int, tokens: int) -> List[int]:
+        """Reserve pages for ``tokens`` KV entries under ``owner`` (a
+        request id). Raises MemoryError when the pool cannot satisfy the
+        request — callers gate admission on :meth:`can_fit` first."""
+        if owner in self._owned:
+            raise ValueError(f"owner {owner} already holds pages")
+        n = self.pages_needed(tokens)
+        if n > len(self._free):
+            self.failed_allocs += 1
+            raise MemoryError(
+                f"owner {owner}: need {n} pages, only {len(self._free)} "
+                f"of {self.usable_pages} free")
+        pages = [self._free.pop() for _ in range(n)]
+        self._owned[owner] = pages
+        self.high_water = max(self.high_water, self.num_used)
+        return list(pages)
+
+    def free(self, owner: int) -> List[int]:
+        """Return ``owner``'s pages to the free list (retirement)."""
+        try:
+            pages = self._owned.pop(owner)
+        except KeyError:
+            raise ValueError(f"owner {owner} holds no pages "
+                             "(double free?)") from None
+        self._free.extend(pages)
+        return pages
+
+    def owned(self, owner: int) -> List[int]:
+        return list(self._owned.get(owner, ()))
+
+    def check(self) -> None:
+        """Invariant check (tests): every usable page is free or owned by
+        exactly one owner; the null page is never issued."""
+        held = [p for pages in self._owned.values() for p in pages]
+        all_pages = sorted(self._free + held)
+        assert all_pages == list(range(self.reserved, self.num_pages)), \
+            "page leak or duplicate issue"
+        assert NULL_PAGE not in held, "null page was issued"
+
+
+@dataclass
+class PoolStats:
+    """Per-decode-step samples of the allocator state, aggregated for
+    :class:`~repro.serving.request.ServeReport`."""
+
+    occupancy: List[float] = field(default_factory=list)
+    fragmentation: List[float] = field(default_factory=list)
+
+    def sample(self, alloc: PageAllocator, live_tokens: int) -> None:
+        self.occupancy.append(alloc.occupancy)
+        self.fragmentation.append(alloc.fragmentation(live_tokens))
+
+    @staticmethod
+    def _mean(xs: Sequence[float]) -> float:
+        return float(sum(xs) / len(xs)) if xs else 0.0
+
+    @property
+    def occupancy_mean(self) -> float:
+        return self._mean(self.occupancy)
+
+    @property
+    def occupancy_peak(self) -> float:
+        return float(max(self.occupancy, default=0.0))
+
+    @property
+    def fragmentation_mean(self) -> float:
+        return self._mean(self.fragmentation)

@@ -112,12 +112,22 @@ class ServeReport:
     """Aggregate result of one engine run over a request set."""
 
     metrics: List[RequestMetrics]
-    scheduler: str                  # "static" | "continuous"
+    scheduler: str                  # "static" | "continuous" | "paged"
     slots: int
     makespan_s: float               # first admission -> last token
     decode_steps: int
     prefills: int
     slot_tokens: np.ndarray         # (slots,) tokens generated per slot
+    # max requests simultaneously holding KV memory (the headline the
+    # paged engine moves: more admits at equal memory budget)
+    peak_concurrency: int = 0
+    # ---- paged-KV pool metrics (zero unless scheduler == "paged") ----
+    page_size: int = 0
+    num_pages: int = 0              # total pool incl. the null page
+    page_occupancy_mean: float = 0.0   # allocated/usable, per decode step
+    page_occupancy_peak: float = 0.0
+    fragmentation_mean: float = 0.0    # 1 - live tokens / allocated slots
+    admission_blocked_steps: int = 0   # steps the queue head waited on pages
 
     @property
     def completed(self) -> int:
@@ -162,7 +172,7 @@ class ServeReport:
 
         tl = sorted(self.token_latency_samples_s())
         tt = sorted(self.ttft_samples_s())
-        return {
+        out = {
             "scheduler": self.scheduler,
             "completed": self.completed,
             "total_new_tokens": self.total_new_tokens,
@@ -172,9 +182,20 @@ class ServeReport:
             "decode_steps": self.decode_steps,
             "prefills": self.prefills,
             "occupancy": self.occupancy,
+            "peak_concurrency": self.peak_concurrency,
             "slot_balance": slot_load_balance(self.slot_tokens),
             "ttft_p50_s": pct(tt, 50.0),
             "ttft_p95_s": pct(tt, 95.0),
             "tok_p50_s": pct(tl, 50.0),
             "tok_p95_s": pct(tl, 95.0),
         }
+        if self.num_pages:
+            out.update({
+                "page_size": self.page_size,
+                "num_pages": self.num_pages,
+                "page_occupancy_mean": self.page_occupancy_mean,
+                "page_occupancy_peak": self.page_occupancy_peak,
+                "fragmentation_mean": self.fragmentation_mean,
+                "admission_blocked_steps": self.admission_blocked_steps,
+            })
+        return out

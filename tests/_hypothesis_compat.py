@@ -71,6 +71,11 @@ except ImportError:
         def __init__(self, **kwargs):
             pass
 
+        def __call__(self, fn):
+            # real hypothesis settings instances decorate test functions;
+            # the shim applies its module-wide example count instead
+            return fn
+
         @classmethod
         def register_profile(cls, name, **kwargs):
             cls._profiles[name] = kwargs

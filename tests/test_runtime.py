@@ -182,6 +182,58 @@ def test_data_prefetch_iterator():
     b0 = next(it)
     np.testing.assert_array_equal(np.asarray(b0["tokens"]),
                                   np.asarray(d.batch_at(0)["tokens"]))
+    it.close()
+
+
+def test_iterate_respects_dp_sharding():
+    """The prefetch producer must thread shard/num_shards through to
+    batch_at — it used to always build the FULL global batch on every
+    data-parallel host."""
+    cfg = reduced(ARCHS["granite-3-8b"])
+    d = SyntheticLM(cfg, batch=8, seq=32, seed=2)
+    it = d.iterate(start_step=3, shard=1, num_shards=4)
+    try:
+        got = next(it)
+    finally:
+        it.close()
+    want = d.batch_at(3, shard=1, num_shards=4)
+    assert got["tokens"].shape[0] == 2              # 8 rows / 4 shards
+    np.testing.assert_array_equal(np.asarray(got["tokens"]),
+                                  np.asarray(want["tokens"]))
+
+
+def test_iterate_builds_each_step_once_and_joins():
+    """Against a full queue the producer must BLOCK on put, not recompute
+    the same step's batch every timeout; and closing the generator must
+    join the producer thread instead of leaving it running."""
+    import threading
+    import time
+
+    cfg = reduced(ARCHS["granite-3-8b"])
+    calls = []
+
+    class Counting(SyntheticLM):
+        def batch_at(self, step, shard=0, num_shards=1):
+            calls.append(step)
+            return super().batch_at(step, shard=shard,
+                                    num_shards=num_shards)
+
+    d = Counting(cfg, batch=2, seq=16)
+    d.batch_at(999)        # warm lazy jnp/XLA pools off the thread delta
+    calls.clear()
+    before = set(threading.enumerate())
+    it = d.iterate(start_step=0, prefetch=1)
+    next(it)
+    spawned = [t for t in threading.enumerate() if t not in before]
+    assert spawned, "no producer thread spawned"
+    # queue stays full from here: the producer sits blocked on put (it
+    # used to re-call batch_at every 0.5 s while spinning on queue.Full)
+    time.sleep(1.2)
+    assert len(calls) == len(set(calls)), \
+        f"steps recomputed while the queue was full: {sorted(calls)}"
+    it.close()
+    for t in spawned:
+        assert not t.is_alive(), "producer thread not joined on close"
 
 
 # -------------------------------------------------------------- optimizer

@@ -149,6 +149,48 @@ def test_generate_single_host_transfer(monkeypatch):
         f"{fake.asarray_calls} host transfers for 8 tokens"
 
 
+def test_generate_rejects_zero_budget():
+    """max_new_tokens=0 used to slip through (steps=-1 built a (B, 0)
+    token buffer); now it is rejected with a clear error."""
+    batch = {"tokens": jnp.zeros((2, 4), jnp.int32)}
+    with pytest.raises(ValueError, match="max_new_tokens must be >= 1"):
+        generate(stub_prefill, stub_decode, None, batch,
+                 prompt_len=4, max_new_tokens=0)
+
+
+def test_generate_single_token_budget_skips_decode_phase():
+    """max_new_tokens=1: the whole output comes from prefill, so no
+    decode step runs and decode_s must be exactly 0 — throughput used to
+    be divided by the timing of an empty decode loop."""
+    batch = {"tokens": jnp.zeros((2, 4), jnp.int32)}
+    res = generate(stub_prefill, stub_decode, None, batch,
+                   prompt_len=4, max_new_tokens=1)
+    assert res.decode_s == 0.0
+    np.testing.assert_array_equal(res.tokens, [[1], [1]])
+    assert res.total_new_tokens == 2
+    assert res.tokens_per_s == pytest.approx(2 / res.prefill_s)
+
+
+def test_generate_eos_throughput_counts_live_tokens():
+    """Rows that retire early on eos_id contribute only their live
+    prefix to tokens_per_s — not the full B * max_new_tokens the
+    lockstep batch idled through."""
+    batch = {"tokens": jnp.zeros((2, 4), jnp.int32)}
+    # stub decode emits pos+1 from prompt_len=4: tokens [1, 5, 6, 7, 8];
+    # eos_id=6 terminates every row after its third token
+    res = generate(stub_prefill, stub_decode, None, batch,
+                   prompt_len=4, max_new_tokens=5, eos_id=6)
+    np.testing.assert_array_equal(res.new_tokens, [3, 3])
+    assert res.total_new_tokens == 6
+    assert res.tokens_per_s == pytest.approx(
+        6 / (res.prefill_s + res.decode_s))
+    # without an eos the full budget counts, matching the old behavior
+    res2 = generate(stub_prefill, stub_decode, None, batch,
+                    prompt_len=4, max_new_tokens=5)
+    np.testing.assert_array_equal(res2.new_tokens, [5, 5])
+    assert res2.total_new_tokens == 10
+
+
 # ------------------------------------- bugfix regression: measure_step
 def test_measure_step_blocks_each_warmup(monkeypatch):
     """Every warmup call must be blocked (not just the last), otherwise

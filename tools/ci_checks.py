@@ -8,6 +8,7 @@ workflow file:
     PYTHONPATH=src python tools/ci_checks.py serving-goodput
     PYTHONPATH=src python tools/ci_checks.py tuned-cache
     PYTHONPATH=src python tools/ci_checks.py scaling-efficiency
+    PYTHONPATH=src python tools/ci_checks.py paged-parity
     PYTHONPATH=src python tools/ci_checks.py inject-slowdown --factor 2
     PYTHONPATH=src python tools/ci_checks.py regression-gate
 
@@ -15,6 +16,10 @@ workflow file:
 the factor; ``regression-gate`` is the whole CI gate loop in one
 command (compare vs restored baselines, re-bless, then self-test that a
 scratch-copy slowdown makes the compare exit exactly 3).
+``paged-parity`` is standalone (no JSONL): it builds a tiny monolithic
+and paged engine pair at equal KV memory budget and asserts greedy
+token parity plus strictly-more concurrent admissions on the paged
+side.
 
 Every check takes ``--jsonl`` (default ``results/bench/latest.jsonl``)
 and exits 0/1; assertion messages name the offending record.
@@ -132,6 +137,74 @@ def check_scaling_efficiency(args: argparse.Namespace) -> int:
     return 0
 
 
+def check_paged_parity(args: argparse.Namespace) -> int:
+    """The paged-KV correctness gate, self-contained on a tiny model:
+
+    * greedy outputs of the paged engine are token-identical to the
+      monolithic continuous engine for every request — across mixed
+      decode budgets AND mixed prompt lengths (chunked prefill included);
+    * at equal KV memory budget (slots x span tokens on both sides) the
+      paged engine admits strictly more concurrent requests on the
+      mixed-budget burst.
+    """
+    from repro.data.pipeline import synth_requests
+    from repro.launch.serve import build_engine
+    from repro.serving import SimClock
+
+    reduce_kw = dict(layers=2, d_model=64, vocab=128, d_ff=128)
+    prompt, budget_max, slots, ps = 8, 24, 4, args.page_size
+    span = prompt + budget_max
+    cont, cfg = build_engine(
+        "granite-3-8b",
+        batch=slots,
+        prompt_len=prompt,
+        max_new_tokens=budget_max,
+        scheduler="continuous",
+        reduce_kw=reduce_kw,
+        clock=SimClock(),
+    )
+    paged, _ = build_engine(
+        "granite-3-8b",
+        batch=2 * slots,
+        prompt_len=prompt,
+        max_new_tokens=budget_max,
+        scheduler="paged",
+        page_size=ps,
+        num_pages=slots * span // ps,
+        prefill_chunk_tokens=prompt // 2,
+        reduce_kw=reduce_kw,
+        clock=SimClock(),
+    )
+    # mixed budgets (burst) + a second wave with a shorter prompt, so
+    # parity also covers chunked prefill ending on a partial chunk
+    reqs = synth_requests(cfg, 8, prompt, max_new_tokens=(2, budget_max))
+    short = synth_requests(cfg, 4, prompt - 3, max_new_tokens=5, seed=1)
+    for r in short:
+        r.rid += 100
+    reqs = reqs + short
+    rc = cont.run(reqs)
+    rp = paged.run(reqs)
+    toks_c = {m.rid: [int(t) for t in m.tokens] for m in rc.metrics}
+    toks_p = {m.rid: [int(t) for t in m.tokens] for m in rp.metrics}
+    assert rc.completed == rp.completed == len(reqs), (
+        f"incomplete runs: continuous {rc.completed}, paged {rp.completed}"
+    )
+    for rid, want in toks_c.items():
+        assert toks_p[rid] == want, (
+            f"request {rid}: paged tokens {toks_p[rid]} != monolithic {want}"
+        )
+    assert rp.peak_concurrency > rc.peak_concurrency, (
+        f"paged peak_concurrency {rp.peak_concurrency} <= monolithic "
+        f"{rc.peak_concurrency} at equal KV budget ({slots * span} tokens)"
+    )
+    print(
+        f"paged-parity: {len(reqs)} requests token-identical; "
+        f"concurrency {rp.peak_concurrency} > {rc.peak_concurrency} "
+        f"at {slots * span}-token budget OK"
+    )
+    return 0
+
+
 def _inject(jsonl: str, factor: float) -> int:
     from repro.bench import write_jsonl
 
@@ -229,6 +302,13 @@ def main(argv: list[str] | None = None) -> int:
     )
     p.add_argument("--max-efficiency", type=float, default=4.0)
     p.set_defaults(fn=check_scaling_efficiency)
+
+    p = sub.add_parser(
+        "paged-parity",
+        help="paged engine: token parity + admits-more at equal KV budget",
+    )
+    p.add_argument("--page-size", type=int, default=8)
+    p.set_defaults(fn=check_paged_parity)
 
     p = sub.add_parser(
         "inject-slowdown",
