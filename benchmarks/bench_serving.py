@@ -18,11 +18,20 @@ applied to the paper's Tier-2 deployment axis:
   strictly more concurrent requests (``peak_concurrency``) because
   admission reserves pages for actual request lengths, not whole spans;
 * ``serving/paged_page_size``       — page size x offered load sweep
-  recording page occupancy / internal fragmentation / goodput.
+  recording page occupancy / internal fragmentation / goodput;
+* ``serving/prefix_shared_burst``   — shared-system-prompt burst at
+  equal KV budget, radix prefix cache off vs on: sharing must admit
+  strictly more concurrently and save prefill tokens (token parity is
+  gated by ``tools/ci_checks.py prefix-parity``);
+* ``serving/multi_turn_replay``     — multi-turn session replay
+  (``data/pipeline.synth_sessions``) off vs on: warm turns re-prefill
+  only the newest turn, so warm TTFT < cold TTFT on the same schedule.
 
 Every record carries ``ttft_us`` (median time-to-first-token) and
 per-token ``p50_us``/``p95_us`` stamped from the decode-step samples;
 paged records add the page-pool fields from ``ServeReport.summary``.
+The two prefix scenarios run under ``SimClock`` so their latency
+orderings are schedule-determined (CI-stable), not host-noise-determined.
 """
 from __future__ import annotations
 
@@ -44,7 +53,12 @@ PAGED_LANES = 8                    # decode lanes; admission is page-bound
 
 _PAGE_KEYS = ("page_size", "num_pages", "page_occupancy_mean",
               "page_occupancy_peak", "fragmentation_mean",
-              "admission_blocked_steps")
+              "fragmentation_peak", "pages_high_water", "failed_allocs",
+              "admission_blocked_steps",
+              # prefix-sharing radix cache (cache-enabled records only)
+              "prefix_hit_rate", "prefix_hits", "prefix_lookups",
+              "prefill_tokens_saved", "pages_shared_peak",
+              "prefix_evictions", "ttft_warm_p50_s", "ttft_cold_p50_s")
 
 
 @functools.lru_cache(maxsize=2)
@@ -185,6 +199,104 @@ def paged_page_size(wl: Workload):
     reqs = _requests(budgets=(4, 12), rate_per_s=rate)
     report = _paged_engine(ps)[0].run(reqs)
     yield _record(f"serving/paged_ps{ps}_load{int(rate)}", report)
+
+
+@functools.lru_cache(maxsize=4)
+def _prefix_engine(prefix_cache: bool, span: int, num_pages: int,
+                   page_size: int = 8, chunk: int = 16):
+    """Paged engine pair for the prefix scenarios: identical pool budget
+    and lanes, only the radix cache toggled. SimClock, so TTFT and
+    admission orderings depend on the schedule alone."""
+    from repro.launch.serve import build_engine
+    from repro.serving import SimClock
+
+    eng, cfg = build_engine(
+        ARCH, batch=PAGED_LANES, prompt_len=span - MAX_BUDGET,
+        max_new_tokens=MAX_BUDGET, scheduler="paged",
+        page_size=page_size, num_pages=num_pages,
+        prefill_chunk_tokens=chunk, prefix_cache=prefix_cache,
+        clock=SimClock(),
+        reduce_kw=dict(layers=2, d_model=64, vocab=128, d_ff=128))
+    return eng, cfg
+
+
+def _shared_burst(cfg, n=N_REQ, system_len=16, suffix_len=8, budget=8):
+    """Burst of ``n`` requests sharing one system prompt with distinct
+    user suffixes — the many-users-one-assistant admission pattern."""
+    import numpy as np
+
+    rng = np.random.default_rng(7)
+    system = rng.integers(1, cfg.vocab_size, system_len).astype(np.int32)
+    reqs = []
+    from repro.serving import Request
+    for i in range(n):
+        suffix = rng.integers(1, cfg.vocab_size, suffix_len
+                              ).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=np.concatenate([system, suffix]),
+                            max_new_tokens=budget, arrival_s=0.0))
+    return reqs
+
+
+@scenario(
+    "serving/prefix_shared_burst",
+    tags=("tier2", "serving", "paged", "prefix", "measured"),
+    paper_ref="Tier-2 deployment (prefix sharing at equal KV budget)",
+    workloads=[Workload(label="cache_off", arch=ARCH,
+                        knobs={"prefix_cache": False}),
+               Workload(label="cache_on", arch=ARCH,
+                        knobs={"prefix_cache": True})])
+def prefix_shared_burst(wl: Workload):
+    """Shared-system-prompt burst at one fixed page budget: without
+    sharing every request pays full pages for the common prefix and the
+    pool caps concurrency early; with the radix cache the prefix is one
+    physical page set under N block tables, so the same pool admits
+    strictly more at once and skips the redundant prefill compute. The
+    cross-engine assertions (strictly-more + token parity) are gated by
+    ``tools/ci_checks.py prefix-parity``; the records carry the raw
+    numbers."""
+    pc = wl.knobs["prefix_cache"]
+    span = 24 + 8                     # 16 system + 8 suffix + 8 budget
+    eng, cfg = _prefix_engine(pc, span, num_pages=16)
+    report = eng.run(_shared_burst(cfg))
+    assert report.completed == N_REQ
+    if pc:
+        assert report.prefill_tokens_saved > 0, "cache on but nothing saved"
+    yield _record(f"serving/prefix_burst_{'on' if pc else 'off'}", report)
+
+
+@scenario(
+    "serving/multi_turn_replay",
+    tags=("tier2", "serving", "paged", "prefix", "measured"),
+    paper_ref="Tier-2 deployment (multi-turn session replay)",
+    workloads=[Workload(label="cache_off", arch=ARCH,
+                        knobs={"prefix_cache": False}),
+               Workload(label="cache_on", arch=ARCH,
+                        knobs={"prefix_cache": True})])
+def multi_turn_replay(wl: Workload):
+    """Chat sessions replaying their accumulated history every turn
+    (``synth_sessions``): with the cache on, turn t matches turn t-1's
+    prompt pages and re-prefills only the newest turn, so warm-turn TTFT
+    must beat cold-turn TTFT on the cache-enabled record (asserted here
+    — SimClock makes the ordering structural). Hit rate and tokens saved
+    ride on every record."""
+    from repro.data.pipeline import synth_sessions
+
+    pc = wl.knobs["prefix_cache"]
+    turns, budget = 3, 8
+    span = 32 + turns * 16 + budget   # longest final-turn prompt + budget
+    eng, cfg = _prefix_engine(pc, span, num_pages=45)
+    reqs = synth_sessions(cfg, 2, turns, max_new_tokens=budget,
+                          think_s=200.0, stagger_s=60.0, seed=3)
+    report = eng.run(reqs)
+    assert report.completed == len(reqs)
+    if pc:
+        warm, cold = (report.ttft_warm_samples_s(),
+                      report.ttft_cold_samples_s())
+        assert warm and cold, "replay produced no warm/cold split"
+        assert max(warm) < min(cold), (
+            f"warm TTFT {warm} not strictly below cold TTFT {cold}")
+        assert report.prefix_hit_rate > 0
+    yield _record(f"serving/replay_{'on' if pc else 'off'}", report)
 
 
 @scenario(

@@ -7,6 +7,11 @@ scheduler over a synthetic Poisson request stream.
 prints per-request TTFT / per-token latency percentiles, goodput, and
 slot occupancy (the Tier-2 deployment metrics); `--scheduler static`
 runs the same workload through the lockstep baseline for comparison.
+
+For the paged scheduler, `--prefix-cache` turns on the prefix-sharing
+radix cache, and `--num-sessions N --turns T` swaps the Poisson request
+stream for a multi-turn session-replay workload (each turn arrives with
+its accumulated history — the pattern prefix sharing accelerates).
 """
 from __future__ import annotations
 
@@ -15,7 +20,7 @@ import argparse
 import jax
 
 from repro.configs import RunConfig, ShapeConfig, get_arch, reduced
-from repro.data.pipeline import synth_requests
+from repro.data.pipeline import synth_requests, synth_sessions
 from repro.launch.mesh import make_mesh, set_mesh
 from repro.runtime.elastic import choose_mesh
 from repro.runtime.steps import build_serve_steps
@@ -27,14 +32,16 @@ def build_engine(arch: str, *, batch: int, prompt_len: int,
                  use_reduced: bool = True, reduce_kw=None,
                  greedy: bool = True, eos_id=None, seed: int = 0,
                  clock=None, page_size: int = 16, num_pages=None,
-                 prefill_chunk_tokens: int = 0):
+                 prefill_chunk_tokens: int = 0,
+                 prefix_cache: bool = False):
     """Build a serving engine for ``arch`` (the launcher's plumbing,
     importable so benchmarks and tests share it). ``reduce_kw`` overrides
     the reduction sizes (layers/d_model/vocab/d_ff — the benchmarks use a
     smaller cell than the CLI default). For ``scheduler="paged"`` the
     engine is wired to the model's paged triple (chunked prefill + the
     block-table decode path) and ``page_size``/``num_pages``/
-    ``prefill_chunk_tokens`` apply. Returns (engine, cfg)."""
+    ``prefill_chunk_tokens``/``prefix_cache`` apply. Returns
+    (engine, cfg)."""
     cfg = get_arch(arch)
     if use_reduced:
         cfg = reduced(cfg, **(reduce_kw or {}))
@@ -55,7 +62,8 @@ def build_engine(arch: str, *, batch: int, prompt_len: int,
             scheduler, model.prefill_chunk, model.decode_step_paged,
             params, model.paged_cache_init, page_size=page_size,
             num_pages=num_pages,
-            prefill_chunk_tokens=prefill_chunk_tokens, **common)
+            prefill_chunk_tokens=prefill_chunk_tokens,
+            prefix_cache=prefix_cache, **common)
     else:
         engine = make_engine(scheduler, prefill_fn, decode_fn, params,
                              model.cache_init, **common)
@@ -78,6 +86,17 @@ def main(argv=None):
                          "(0 = match the monolithic slots*span budget)")
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="chunked-prefill tokens per chunk (0 = one shot)")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="prefix-sharing radix cache (paged scheduler); "
+                         "disabled, the paged engine's output is "
+                         "byte-identical to the cache-free scheduler")
+    ap.add_argument("--num-sessions", type=int, default=0,
+                    help="multi-turn session-replay workload: number of "
+                         "chat sessions (0 = plain Poisson requests)")
+    ap.add_argument("--turns", type=int, default=3,
+                    help="turns per session (with --num-sessions); each "
+                         "turn replays the accumulated history")
     ap.add_argument("--num-requests", type=int, default=8)
     ap.add_argument("--offered-load", type=float, default=0.0,
                     help="Poisson arrival rate in req/s (0 = burst at t=0)")
@@ -89,17 +108,30 @@ def main(argv=None):
     ap.add_argument("--reduced", action="store_true", default=True)
     args = ap.parse_args(argv)
 
+    # session replay grows each turn's prompt by its history; size the
+    # span (and block tables) for the longest final-turn prompt
+    session_prompt_len = 32 + args.turns * 16    # synth_sessions defaults
+    prompt_len = (session_prompt_len if args.num_sessions
+                  else args.prompt_len)
     engine, cfg = build_engine(
-        args.arch, batch=args.batch, prompt_len=args.prompt_len,
+        args.arch, batch=args.batch, prompt_len=prompt_len,
         max_new_tokens=args.max_new_tokens, scheduler=args.scheduler,
         use_reduced=args.reduced, greedy=not args.sample,
         eos_id=args.eos_id if args.eos_id >= 0 else None, seed=args.seed,
         page_size=args.page_size, num_pages=args.num_pages or None,
-        prefill_chunk_tokens=args.prefill_chunk)
-    requests = synth_requests(cfg, args.num_requests, args.prompt_len,
-                              max_new_tokens=args.max_new_tokens,
-                              rate_per_s=args.offered_load, seed=args.seed)
-    engine.warmup(args.prompt_len)
+        prefill_chunk_tokens=args.prefill_chunk,
+        prefix_cache=args.prefix_cache)
+    if args.num_sessions:
+        requests = synth_sessions(cfg, args.num_sessions, args.turns,
+                                  max_new_tokens=args.max_new_tokens,
+                                  rate_per_s=args.offered_load,
+                                  seed=args.seed)
+    else:
+        requests = synth_requests(cfg, args.num_requests, args.prompt_len,
+                                  max_new_tokens=args.max_new_tokens,
+                                  rate_per_s=args.offered_load,
+                                  seed=args.seed)
+    engine.warmup(prompt_len)
     report = engine.run(requests)
     s = report.summary()
     print(f"[{s['scheduler']}] {s['completed']}/{len(requests)} requests, "
@@ -119,6 +151,14 @@ def main(argv=None):
               f"(peak {s['page_occupancy_peak']:.2f}) "
               f"frag={s['fragmentation_mean']:.2f} "
               f"peak_concurrency={s['peak_concurrency']}")
+    if s.get("prefix_lookups") is not None:
+        print(f"  prefix hit_rate={s['prefix_hit_rate']:.2f} "
+              f"({s['prefix_hits']}/{s['prefix_lookups']}) "
+              f"saved={s['prefill_tokens_saved']}tok "
+              f"shared_peak={s['pages_shared_peak']} "
+              f"evictions={s['prefix_evictions']} "
+              f"ttft warm_p50={s['ttft_warm_p50_s'] * 1e3:.1f}ms "
+              f"cold_p50={s['ttft_cold_p50_s'] * 1e3:.1f}ms")
     return report
 
 

@@ -13,7 +13,9 @@ from repro.serving.engine import (SCHEDULERS, ContinuousEngine,
                                   StaticEngine, decode_lockstep,
                                   make_engine)
 from repro.serving.paged import PagedEngine
-from repro.serving.pages import PageAllocator, pages_needed
+from repro.serving.pages import (PageAllocator, PoolInvariantError,
+                                 pages_needed)
+from repro.serving.prefix import RadixCache
 from repro.serving.request import (Request, RequestMetrics, ServeReport,
                                    SimClock, WallClock)
 
@@ -22,6 +24,8 @@ __all__ = [
     "ContinuousEngine",
     "PagedEngine",
     "PageAllocator",
+    "PoolInvariantError",
+    "RadixCache",
     "StaticEngine",
     "decode_lockstep",
     "make_engine",

@@ -19,16 +19,32 @@ fixed number of *decode lanes*) but replaces the per-slot monolithic
   TPU, the gather reference elsewhere); retirement returns pages to the
   allocator's free list mid-stream.
 
-Greedy outputs are token-identical to the monolithic engines — paging is
-a memory-layout change, not a numerics change — which is the correctness
-gate ``tools/ci_checks.py paged-parity`` enforces.
+With ``prefix_cache=True`` a :class:`~repro.serving.prefix.RadixCache`
+sits between the queue and the allocator: admission looks up the longest
+cached page-aligned prefix of the prompt, attaches the matched pages
+read-only into the block table (one physical page, N logical owners via
+the allocator's refcounts), and chunk-prefills only the uncached suffix.
+When the *entire* prompt is cached, the last matched page is
+copy-on-written — duplicated into a fresh page — so re-prefilling the
+single token needed for first-token logits never writes a shared page.
+Sequences are indexed on prefill completion (the prompt) and again on
+retirement (the generated tokens — what makes a returning multi-turn
+session warm); LRU refcount-1 entries are evicted when the pool runs
+low. Disabled (the default), the engine byte-for-byte matches the
+pre-cache scheduler.
+
+Greedy outputs are token-identical to the monolithic engines — paging
+and prefix reuse are memory-layout changes, not numerics changes — which
+is what ``tools/ci_checks.py paged-parity`` and ``prefix-parity``
+enforce.
 
 Unlike the monolithic engines' ``(prefill_fn, decode_fn, cache_init)``
 triple, this engine takes the *paged* triple from
 :class:`repro.models.model.Model`:
 
 * ``prefill_fn(params, caches, tokens, block_tables, start_pos)``
-  (= ``model.prefill_chunk``),
+  (= ``model.prefill_chunk``; ``start_pos`` may land mid-page, the
+  warm-suffix path),
 * ``decode_fn(params, caches, token, pos, block_tables)``
   (= ``model.decode_step_paged``),
 * ``cache_init(num_pages, page_size)`` (= ``model.paged_cache_init``).
@@ -45,6 +61,7 @@ import jax.numpy as jnp
 
 from repro.serving.engine import SCHEDULERS, _EngineBase, _sample_tokens
 from repro.serving.pages import PageAllocator, PoolStats, pages_needed
+from repro.serving.prefix import RadixCache
 from repro.serving.request import Request, RequestMetrics, ServeReport
 
 
@@ -55,14 +72,16 @@ class PagedEngine(_EngineBase):
     monolithic engine's budget (``slots x cache_span`` tokens) plus the
     null page, so the default is budget-equivalent by construction;
     benchmarks pass an explicit pool to compare at exactly equal bytes.
-    ``prefill_chunk_tokens=0`` prefills each prompt in one chunk."""
+    ``prefill_chunk_tokens=0`` prefills each prompt in one chunk.
+    ``prefix_cache=True`` enables the prefix-sharing radix cache."""
 
     scheduler = "paged"
 
     def __init__(self, prefill_fn, decode_fn, params, cache_init, *,
                  slots: int, cache_span: int, page_size: int = 16,
                  num_pages: Optional[int] = None,
-                 prefill_chunk_tokens: int = 0, **kw):
+                 prefill_chunk_tokens: int = 0,
+                 prefix_cache: bool = False, **kw):
         self.page_size = int(page_size)
         # block-table width: logical pages a maximal request can touch
         self.npag_max = -(-cache_span // self.page_size)
@@ -72,6 +91,7 @@ class PagedEngine(_EngineBase):
             num_pages = slots * self.npag_max + 1
         self.num_pages = int(num_pages)
         self.prefill_chunk_tokens = int(prefill_chunk_tokens)
+        self.prefix_cache = bool(prefix_cache)
         super().__init__(prefill_fn, decode_fn, params, cache_init,
                          slots=slots, cache_span=cache_span, **kw)
 
@@ -98,6 +118,13 @@ class PagedEngine(_EngineBase):
         # one compile per chunk length; start_pos stays traced
         self._jit_chunk = jax.jit(
             prefill_fn, donate_argnums=(1,) if donate else ())
+        # copy-on-write: duplicate page src into page dst across every
+        # pool leaf (axis 0 = layers, axis 1 = pages); src/dst stay
+        # traced so one compile covers every divergence point
+        self._jit_copy = jax.jit(
+            lambda caches, src, dst: jax.tree.map(
+                lambda a: a.at[:, dst].set(a[:, src]), caches),
+            donate_argnums=(0,) if donate else ())
         greedy, eos_id = self.greedy, self.eos_id
 
         def pool_step(params, caches, state, key):
@@ -149,29 +176,70 @@ class PagedEngine(_EngineBase):
             admit, donate_argnums=(0,) if donate else ())
 
     # ---------------------------------------------------------- prefill
-    def _chunked_prefill(self, prompt: np.ndarray, btab_dev, clock):
-        """Stream the prompt through the pool in page-filling chunks;
-        returns the last chunk's logits and the number of chunks run.
+    def _chunked_prefill(self, prompt: np.ndarray, btab_dev, clock, *,
+                         start: int = 0):
+        """Stream prompt positions ``[start, len)`` through the pool in
+        page-filling chunks; returns the last chunk's logits and the
+        number of chunks run. ``start > 0`` is the warm path: positions
+        below it are already resident in attached prefix pages, so only
+        the suffix pays prefill compute.
 
         Each chunk sees only the first ``pages_needed(written)`` pages of
         the block table, so attention cost grows with the live prefix
         rather than paying the full cache_span gather on every chunk
         (one jit compile per distinct (chunk length, live pages) pair)."""
         plen = int(prompt.shape[0])
-        cs = self.prefill_chunk_tokens or plen
+        cs = self.prefill_chunk_tokens or (plen - start)
         logits = None
         chunks = 0
-        for start in range(0, plen, cs):
-            end = min(start + cs, plen)
+        for lo in range(start, plen, cs):
+            end = min(lo + cs, plen)
             n_live = pages_needed(end, self.page_size)
-            chunk = jnp.asarray(prompt[None, start:end])
+            chunk = jnp.asarray(prompt[None, lo:end])
             logits, self._caches = self._jit_chunk(
                 self.params, self._caches, chunk, btab_dev[:, :n_live],
-                jnp.int32(start))
+                jnp.int32(lo))
             jax.block_until_ready(logits)
             clock.charge("prefill")     # each chunk is a prefill dispatch
             chunks += 1
         return logits, chunks
+
+    # --------------------------------------------------------- admission
+    def _reserve_pages(self, req: Request, alloc: PageAllocator,
+                      radix: Optional[RadixCache]):
+        """Try to reserve pages for ``req``, reusing the longest cached
+        prefix when the radix cache is on. Returns
+        ``(pages, suffix_start)`` or ``None`` when the pool (even after
+        LRU eviction) cannot cover the fresh remainder — the caller
+        blocks the queue head until a retirement frees pages.
+
+        The suffix start is capped at ``prompt_len - 1``: at least one
+        prompt token must be re-prefilled to produce the first-token
+        logits. When the whole prompt is cached that cap lands mid-page,
+        so the final matched page is attached *copy-on-write* — its K/V
+        is duplicated into a fresh page before the one-token prefill
+        writes into it — and every fully-matched page stays read-only."""
+        total_tokens = req.prompt_len + req.max_new_tokens
+        if radix is None:
+            if not alloc.can_fit(total_tokens):
+                return None
+            return alloc.allocate(req.rid, total_tokens), 0
+        match_pages, match_tok = radix.lookup(np.asarray(req.prompt))
+        s0 = min(match_tok, req.prompt_len - 1)
+        k_full = s0 // self.page_size
+        shared = match_pages[:k_full]
+        cow_src = match_pages[k_full] if s0 < match_tok else None
+        need_fresh = pages_needed(total_tokens, self.page_size) - len(shared)
+        if need_fresh > alloc.num_free:
+            radix.evict(need_fresh - alloc.num_free,
+                        protect=frozenset(match_pages))
+        if need_fresh > alloc.num_free:
+            return None
+        pages = alloc.allocate(req.rid, total_tokens, shared=shared)
+        if cow_src is not None:
+            self._caches = self._jit_copy(self._caches, jnp.int32(cow_src),
+                                          jnp.int32(pages[k_full]))
+        return pages, s0
 
     # -------------------------------------------------------------- run
     def run(self, requests: Sequence[Request]) -> ServeReport:
@@ -183,6 +251,7 @@ class PagedEngine(_EngineBase):
         T = self.cache_span
         self._caches = self.cache_init(self.num_pages, self.page_size)
         alloc = PageAllocator(self.num_pages, self.page_size)
+        radix = RadixCache(alloc) if self.prefix_cache else None
         stats = PoolStats()
         state = {
             "tok": jnp.zeros((B, 1), jnp.int32),
@@ -197,34 +266,56 @@ class PagedEngine(_EngineBase):
             r.rid: RequestMetrics(rid=r.rid, prompt_len=r.prompt_len,
                                   arrival_s=r.arrival_s) for r in reqs}
         plen_of = {r.rid: r.prompt_len for r in reqs}
+        prompt_of: Dict[int, np.ndarray] = {}
         queue = deque(reqs)
         slot_rid: List[Optional[int]] = [None] * B
         active_host = np.zeros(B, bool)
         slot_tokens = np.zeros(B, np.int64)
         decode_steps = prefills = peak_conc = blocked = 0
+        lookups = hits = tokens_saved = 0
+
+        def index_sequence(rid: int, gen_tokens: np.ndarray) -> None:
+            """Index the retired request's full pages: its prompt plus
+            every generated token whose K/V was written (the final
+            sampled token never reaches the pool — no decode step
+            consumed it)."""
+            seq = np.concatenate([
+                prompt_of[rid],
+                np.asarray(gen_tokens[:-1], np.int32)])
+            radix.insert(seq, alloc.owned(rid))
 
         while queue or active_host.any():
             # ---- admission: free lane + arrived request + enough pages
             while (queue and not active_host.all()
                    and t0 + queue[0].arrival_s <= clock.now()):
                 req = queue[0]
-                if not alloc.can_fit(req.prompt_len + req.max_new_tokens):
+                got = self._reserve_pages(req, alloc, radix)
+                if radix is not None:
+                    lookups += 1
+                if got is None:
                     blocked += 1     # FIFO head waits for retirements
                     break
+                pages, s0 = got
                 queue.popleft()
+                prompt_np = np.asarray(req.prompt, np.int32)
+                prompt_of[req.rid] = prompt_np
                 slot = int(np.flatnonzero(~active_host)[0])
                 m = metrics[req.rid]
                 m.admitted_s = clock.now() - t0
                 m.slot = slot
-                pages = alloc.allocate(req.rid,
-                                       req.prompt_len + req.max_new_tokens)
+                m.cached_prompt_tokens = s0
+                if s0 > 0:
+                    hits += 1
+                    tokens_saved += s0
                 peak_conc = max(peak_conc, alloc.num_owners)
                 btab_row = np.zeros(self.npag_max, np.int32)
                 btab_row[:len(pages)] = pages
                 btab_dev = jnp.asarray(btab_row)[None]
                 logits, chunks = self._chunked_prefill(
-                    np.asarray(req.prompt, np.int32), btab_dev, clock)
+                    prompt_np, btab_dev, clock, start=s0)
                 prefills += chunks
+                if radix is not None:   # index the prompt's full pages
+                    radix.insert(prompt_np, pages)
                 key, sub = jax.random.split(key)
                 tok0 = _sample_tokens(logits[:, -1:], sub, self.greedy)
                 m.first_token_s = clock.now() - t0
@@ -269,6 +360,8 @@ class PagedEngine(_EngineBase):
                     m.finished = True
                     m.finish_s = clock.now() - t0
                     m.tokens = np.asarray(state["tokbuf"][s, :m.new_tokens])
+                    if radix is not None:
+                        index_sequence(slot_rid[s], m.tokens)
                     alloc.free(slot_rid[s])
                     slot_rid[s] = None
             active_host = new_active.copy()
@@ -286,7 +379,15 @@ class PagedEngine(_EngineBase):
             page_occupancy_mean=stats.occupancy_mean,
             page_occupancy_peak=stats.occupancy_peak,
             fragmentation_mean=stats.fragmentation_mean,
-            admission_blocked_steps=blocked)
+            fragmentation_peak=stats.fragmentation_peak,
+            pages_high_water=alloc.high_water,
+            failed_allocs=alloc.failed_allocs,
+            admission_blocked_steps=blocked,
+            prefix_enabled=self.prefix_cache,
+            prefix_lookups=lookups, prefix_hits=hits,
+            prefill_tokens_saved=tokens_saved,
+            pages_shared_peak=stats.pages_shared_peak,
+            prefix_evictions=radix.evictions if radix else 0)
 
 
 SCHEDULERS["paged"] = PagedEngine

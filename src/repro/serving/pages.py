@@ -8,6 +8,16 @@ vLLM-style alternative: the KV cache is a pool of ``num_pages`` pages of
 page index -> physical page id), and admission is gated on free pages
 rather than free slots' worth of span.
 
+Pages are **reference counted**: the prefix cache
+(:mod:`repro.serving.prefix`) lets several requests attach the same
+physical page read-only (a shared system prompt's KV is stored once and
+appears in N block tables), and lets retired requests' prefix pages stay
+resident until evicted. ``allocate(owner, tokens, shared=...)`` attaches
+already-issued pages at +1 refcount alongside freshly issued ones;
+``share``/``release`` adjust refcounts without an owner (the cache's own
+holds); ``free(owner)`` decrements and only returns pages whose refcount
+reaches zero to the free list.
+
 Only host-side bookkeeping lives here — the device-side pool tensors and
 the block-table-driven attention are in :mod:`repro.models.transformer`
 and :mod:`repro.kernels.paged_attention`. The allocator is the source of
@@ -18,7 +28,10 @@ truth for the paper-facing memory metrics the benchmarks record:
 * **fragmentation** — 1 - live tokens / (allocated pages x page_size):
   the *internal* fragmentation of partially-filled last pages (paging's
   only waste; the monolithic layout instead wastes the whole unused tail
-  of every span).
+  of every span);
+* **shared surplus** — logical block-table entries minus distinct
+  physical pages under owners: how many pages prefix sharing turned
+  from physical into merely logical (the concurrency multiplier).
 
 Page 0 is reserved as the *null page*: retired decode slots and padded
 block-table entries point at it, so masked lanes always gather valid
@@ -40,9 +53,18 @@ def pages_needed(tokens: int, page_size: int) -> int:
     return -(-tokens // page_size)
 
 
+class PoolInvariantError(AssertionError):
+    """Raised by :meth:`PageAllocator.check` on a broken pool invariant.
+
+    An ``AssertionError`` subclass so existing ``pytest.raises`` /
+    CI expectations keep matching, but raised explicitly — invariant
+    checking must NOT silently no-op under ``python -O`` the way bare
+    ``assert`` statements do."""
+
+
 @dataclass
 class PageAllocator:
-    """Free-list allocator over a fixed pool of KV pages.
+    """Refcounting free-list allocator over a fixed pool of KV pages.
 
     ``num_pages`` counts the whole device pool *including* the reserved
     null page, so "equal memory budget" comparisons against a monolithic
@@ -66,6 +88,7 @@ class PageAllocator:
         self._free: List[int] = list(
             range(self.num_pages - 1, self.reserved - 1, -1))
         self._owned: Dict[int, List[int]] = {}      # owner -> page ids
+        self._refs: Dict[int, int] = {}             # page id -> refcount
         self.high_water = 0                         # peak pages in use
         self.failed_allocs = 0
 
@@ -89,8 +112,14 @@ class PageAllocator:
     def pages_needed(self, tokens: int) -> int:
         return pages_needed(tokens, self.page_size)
 
-    def can_fit(self, tokens: int) -> bool:
-        return self.pages_needed(tokens) <= self.num_free
+    def can_fit(self, tokens: int, shared_pages: int = 0) -> bool:
+        """Whether ``tokens`` KV entries fit, given that the first
+        ``shared_pages`` pages are attached from the prefix cache rather
+        than drawn from the free list."""
+        return self.pages_needed(tokens) - shared_pages <= self.num_free
+
+    def refcount(self, page: int) -> int:
+        return self._refs.get(page, 0)
 
     @property
     def occupancy(self) -> float:
@@ -99,51 +128,144 @@ class PageAllocator:
 
     def fragmentation(self, live_tokens: int) -> float:
         """Internal fragmentation: allocated-but-unfilled token slots as a
-        fraction of allocated capacity (0 when nothing is allocated)."""
+        fraction of allocated capacity (0 when nothing is allocated;
+        clamped at 0 when sharing makes logical tokens exceed physical
+        capacity)."""
         cap = self.num_used * self.page_size
         if cap <= 0:
             return 0.0
         return max(0.0, 1.0 - live_tokens / cap)
 
+    def shared_page_surplus(self) -> int:
+        """Logical block-table entries minus distinct physical pages under
+        owners — how many pages sharing deduplicated. 0 without sharing."""
+        logical = 0
+        distinct: set = set()
+        for pages in self._owned.values():
+            logical += len(pages)
+            distinct.update(pages)
+        return logical - len(distinct)
+
     # -------------------------------------------------------- allocation
-    def allocate(self, owner: int, tokens: int) -> List[int]:
+    def allocate(self, owner: int, tokens: int,
+                 shared: Sequence[int] = ()) -> List[int]:
         """Reserve pages for ``tokens`` KV entries under ``owner`` (a
-        request id). Raises MemoryError when the pool cannot satisfy the
-        request — callers gate admission on :meth:`can_fit` first."""
+        request id). ``shared`` pages (a page-aligned cached prefix, in
+        logical order) are attached at +1 refcount instead of being drawn
+        from the free list; fresh pages fill the remainder, so the
+        returned block table is ``list(shared) + fresh``. Raises
+        MemoryError when the free list cannot cover the fresh remainder —
+        callers gate admission on :meth:`can_fit` first."""
         if owner in self._owned:
             raise ValueError(f"owner {owner} already holds pages")
-        n = self.pages_needed(tokens)
-        if n > len(self._free):
+        shared = list(shared)
+        total = self.pages_needed(tokens)
+        if len(shared) > total:
+            raise ValueError(
+                f"owner {owner}: {len(shared)} shared pages exceed the "
+                f"{total} pages needed for {tokens} tokens")
+        for p in shared:
+            if p not in self._refs:
+                raise ValueError(
+                    f"owner {owner}: shared page {p} is not issued")
+        fresh_n = total - len(shared)
+        if fresh_n > len(self._free):
             self.failed_allocs += 1
             raise MemoryError(
-                f"owner {owner}: need {n} pages, only {len(self._free)} "
+                f"owner {owner}: need {fresh_n} fresh pages "
+                f"(+{len(shared)} shared), only {len(self._free)} "
                 f"of {self.usable_pages} free")
-        pages = [self._free.pop() for _ in range(n)]
-        self._owned[owner] = pages
+        fresh = [self._free.pop() for _ in range(fresh_n)]
+        for p in shared:
+            self._refs[p] += 1
+        for p in fresh:
+            self._refs[p] = 1
+        self._owned[owner] = shared + fresh
         self.high_water = max(self.high_water, self.num_used)
-        return list(pages)
+        return list(shared + fresh)
+
+    def share(self, pages: Sequence[int]) -> None:
+        """Take an ownerless +1 reference on already-issued pages (the
+        prefix cache's hold, which keeps indexed pages resident after
+        their writer retires)."""
+        pages = list(pages)
+        for p in pages:
+            if p not in self._refs:
+                raise ValueError(f"cannot share page {p}: not issued")
+        for p in pages:
+            self._refs[p] += 1
+
+    def release(self, pages: Sequence[int]) -> List[int]:
+        """Drop one reference per page; pages reaching refcount 0 return
+        to the free list. Returns the pages actually freed."""
+        freed: List[int] = []
+        for p in pages:
+            try:
+                c = self._refs[p]
+            except KeyError:
+                raise ValueError(f"cannot release page {p}: not issued"
+                                 ) from None
+            if c <= 1:
+                del self._refs[p]
+                self._free.append(p)
+                freed.append(p)
+            else:
+                self._refs[p] = c - 1
+        return freed
 
     def free(self, owner: int) -> List[int]:
-        """Return ``owner``'s pages to the free list (retirement)."""
+        """Retire ``owner``: drop its reference on every page it holds.
+        Only pages whose refcount reaches zero go back to the free list
+        (shared prefix pages survive while the cache or another request
+        still references them). Returns the pages actually freed."""
         try:
             pages = self._owned.pop(owner)
         except KeyError:
             raise ValueError(f"owner {owner} holds no pages "
                              "(double free?)") from None
-        self._free.extend(pages)
-        return pages
+        return self.release(pages)
 
     def owned(self, owner: int) -> List[int]:
         return list(self._owned.get(owner, ()))
 
     def check(self) -> None:
-        """Invariant check (tests): every usable page is free or owned by
-        exactly one owner; the null page is never issued."""
-        held = [p for pages in self._owned.values() for p in pages]
-        all_pages = sorted(self._free + held)
-        assert all_pages == list(range(self.reserved, self.num_pages)), \
-            "page leak or duplicate issue"
-        assert NULL_PAGE not in held, "null page was issued"
+        """Invariant check: every usable page is either on the free list
+        or issued with refcount >= 1 (never both), refcounts cover every
+        owner holding the page, and the null page is never issued.
+
+        Raises :class:`PoolInvariantError` explicitly — these checks
+        stay live under ``python -O`` (bare ``assert`` would vanish)."""
+        def fail(msg: str) -> None:
+            raise PoolInvariantError(msg)
+
+        if len(set(self._free)) != len(self._free):
+            fail(f"duplicate pages on the free list: {sorted(self._free)}")
+        issued = set(self._refs)
+        if issued & set(self._free):
+            fail(f"pages both issued and free: "
+                 f"{sorted(issued & set(self._free))}")
+        universe = set(range(self.reserved, self.num_pages))
+        if issued | set(self._free) != universe:
+            fail("page leak: issued+free != usable range "
+                 f"(missing {sorted(universe - issued - set(self._free))}, "
+                 f"extra {sorted((issued | set(self._free)) - universe)})")
+        holders: Dict[int, int] = {}
+        for owner, pages in self._owned.items():
+            if len(set(pages)) != len(pages):
+                fail(f"owner {owner} holds duplicate pages: {pages}")
+            for p in pages:
+                holders[p] = holders.get(p, 0) + 1
+        for p, c in self._refs.items():
+            if c < 1:
+                fail(f"issued page {p} has refcount {c} < 1")
+            if c < holders.get(p, 0):
+                fail(f"page {p}: refcount {c} < {holders[p]} owners "
+                     "holding it")
+        for p in holders:
+            if p not in issued:
+                fail(f"owned page {p} missing from the refcount table")
+        if NULL_PAGE in issued or NULL_PAGE in self._free:
+            fail("null page was issued")
 
 
 @dataclass
@@ -153,10 +275,12 @@ class PoolStats:
 
     occupancy: List[float] = field(default_factory=list)
     fragmentation: List[float] = field(default_factory=list)
+    pages_shared: List[int] = field(default_factory=list)
 
     def sample(self, alloc: PageAllocator, live_tokens: int) -> None:
         self.occupancy.append(alloc.occupancy)
         self.fragmentation.append(alloc.fragmentation(live_tokens))
+        self.pages_shared.append(alloc.shared_page_surplus())
 
     @staticmethod
     def _mean(xs: Sequence[float]) -> float:
@@ -173,3 +297,11 @@ class PoolStats:
     @property
     def fragmentation_mean(self) -> float:
         return self._mean(self.fragmentation)
+
+    @property
+    def fragmentation_peak(self) -> float:
+        return float(max(self.fragmentation, default=0.0))
+
+    @property
+    def pages_shared_peak(self) -> int:
+        return int(max(self.pages_shared, default=0))

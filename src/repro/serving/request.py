@@ -51,6 +51,9 @@ class RequestMetrics:
     new_tokens: int = 0             # tokens actually generated (<= budget)
     slot: int = -1                  # KV slot that served it
     finished: bool = False
+    # prompt tokens served from the prefix cache (0 = cold prefill; >0
+    # means only the suffix was chunk-prefilled — the warm-TTFT lever)
+    cached_prompt_tokens: int = 0
     # duration of each decode step that produced one of this request's
     # tokens (token 0 comes from prefill and is covered by TTFT)
     token_latencies_s: List[float] = field(default_factory=list)
@@ -127,7 +130,17 @@ class ServeReport:
     page_occupancy_mean: float = 0.0   # allocated/usable, per decode step
     page_occupancy_peak: float = 0.0
     fragmentation_mean: float = 0.0    # 1 - live tokens / allocated slots
+    fragmentation_peak: float = 0.0
+    pages_high_water: int = 0          # peak pages simultaneously in use
+    failed_allocs: int = 0             # pool-side allocation refusals
     admission_blocked_steps: int = 0   # steps the queue head waited on pages
+    # ---- prefix-sharing radix cache (unset unless enabled) -----------
+    prefix_enabled: bool = False
+    prefix_lookups: int = 0            # admissions that consulted the cache
+    prefix_hits: int = 0               # admissions with >0 cached tokens
+    prefill_tokens_saved: int = 0      # prompt tokens not re-prefilled
+    pages_shared_peak: int = 0         # peak logical-minus-physical pages
+    prefix_evictions: int = 0          # LRU evictions under pool pressure
 
     @property
     def completed(self) -> int:
@@ -156,8 +169,23 @@ class ServeReport:
         useful = sum(len(m.token_latencies_s) for m in self.metrics)
         return useful / (self.slots * self.decode_steps)
 
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of cache-consulting admissions that reused >= 1 page."""
+        return self.prefix_hits / max(self.prefix_lookups, 1)
+
     def ttft_samples_s(self) -> List[float]:
         return [m.ttft_s for m in self.metrics if m.finished]
+
+    def ttft_warm_samples_s(self) -> List[float]:
+        """TTFT of requests that reused cached prefix pages."""
+        return [m.ttft_s for m in self.metrics
+                if m.finished and m.cached_prompt_tokens > 0]
+
+    def ttft_cold_samples_s(self) -> List[float]:
+        """TTFT of requests prefilled entirely from scratch."""
+        return [m.ttft_s for m in self.metrics
+                if m.finished and m.cached_prompt_tokens == 0]
 
     def token_latency_samples_s(self) -> List[float]:
         out: List[float] = []
@@ -196,6 +224,22 @@ class ServeReport:
                 "page_occupancy_mean": self.page_occupancy_mean,
                 "page_occupancy_peak": self.page_occupancy_peak,
                 "fragmentation_mean": self.fragmentation_mean,
+                "fragmentation_peak": self.fragmentation_peak,
+                "pages_high_water": self.pages_high_water,
+                "failed_allocs": self.failed_allocs,
                 "admission_blocked_steps": self.admission_blocked_steps,
+            })
+        if self.prefix_enabled:
+            warm = sorted(self.ttft_warm_samples_s())
+            cold = sorted(self.ttft_cold_samples_s())
+            out.update({
+                "prefix_hit_rate": self.prefix_hit_rate,
+                "prefix_hits": self.prefix_hits,
+                "prefix_lookups": self.prefix_lookups,
+                "prefill_tokens_saved": self.prefill_tokens_saved,
+                "pages_shared_peak": self.pages_shared_peak,
+                "prefix_evictions": self.prefix_evictions,
+                "ttft_warm_p50_s": pct(warm, 50.0),
+                "ttft_cold_p50_s": pct(cold, 50.0),
             })
         return out

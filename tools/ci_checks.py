@@ -9,6 +9,7 @@ workflow file:
     PYTHONPATH=src python tools/ci_checks.py tuned-cache
     PYTHONPATH=src python tools/ci_checks.py scaling-efficiency
     PYTHONPATH=src python tools/ci_checks.py paged-parity
+    PYTHONPATH=src python tools/ci_checks.py prefix-parity
     PYTHONPATH=src python tools/ci_checks.py inject-slowdown --factor 2
     PYTHONPATH=src python tools/ci_checks.py regression-gate
 
@@ -16,10 +17,13 @@ workflow file:
 the factor; ``regression-gate`` is the whole CI gate loop in one
 command (compare vs restored baselines, re-bless, then self-test that a
 scratch-copy slowdown makes the compare exit exactly 3).
-``paged-parity`` is standalone (no JSONL): it builds a tiny monolithic
-and paged engine pair at equal KV memory budget and asserts greedy
-token parity plus strictly-more concurrent admissions on the paged
-side.
+``paged-parity`` and ``prefix-parity`` are standalone (no JSONL):
+``paged-parity`` builds a tiny monolithic and paged engine pair at
+equal KV memory budget and asserts greedy token parity plus
+strictly-more concurrent admissions on the paged side; ``prefix-parity``
+does the same for the prefix-sharing radix cache (cache on vs off at
+equal page budget: token parity on a shared-prompt burst and a
+multi-turn replay, strictly-more admissions, warm TTFT < cold TTFT).
 
 Every check takes ``--jsonl`` (default ``results/bench/latest.jsonl``)
 and exits 0/1; assertion messages name the offending record.
@@ -205,6 +209,95 @@ def check_paged_parity(args: argparse.Namespace) -> int:
     return 0
 
 
+def check_prefix_parity(args: argparse.Namespace) -> int:
+    """The prefix-sharing correctness gate, standalone on a tiny model:
+
+    * greedy outputs of the prefix-cached paged engine are
+      token-identical to the cache-free paged engine on a
+      shared-system-prompt burst plus a multi-turn session replay
+      (covers read-only page attach, warm-suffix chunked prefill, AND
+      the copy-on-write path when a whole prompt is cached);
+    * at equal page budget the cached engine admits strictly more
+      concurrent requests on the shared burst and reports
+      prefill_tokens_saved > 0.
+    """
+    import numpy as np
+
+    from repro.data.pipeline import synth_sessions
+    from repro.launch.serve import build_engine
+    from repro.serving import Request, SimClock
+
+    reduce_kw = dict(layers=2, d_model=64, vocab=128, d_ff=128)
+    ps, budget, lanes = args.page_size, 8, 8
+    system_len, suffix_len, turns = 16, 8, 3
+    span = 32 + turns * 16 + budget      # covers the longest replay turn
+    engines = {}
+    for pc in (False, True):
+        engines[pc], cfg = build_engine(
+            "granite-3-8b",
+            batch=lanes,
+            prompt_len=span - budget,
+            max_new_tokens=budget,
+            scheduler="paged",
+            page_size=ps,
+            num_pages=args.num_pages,
+            prefill_chunk_tokens=2 * ps,
+            prefix_cache=pc,
+            reduce_kw=reduce_kw,
+            clock=SimClock(),
+        )
+    # shared-system-prompt burst: one system prefix, distinct suffixes,
+    # duplicated prompts included so the whole-prompt CoW path runs
+    rng = np.random.default_rng(7)
+    system = rng.integers(1, cfg.vocab_size, system_len).astype(np.int32)
+    burst = []
+    for i in range(8):
+        sfx = rng.integers(1, cfg.vocab_size, suffix_len).astype(np.int32)
+        burst.append(Request(rid=i, prompt=np.concatenate([system, sfx]),
+                             max_new_tokens=budget))
+    burst.append(Request(rid=8, prompt=burst[0].prompt.copy(),
+                         max_new_tokens=budget, arrival_s=1.0))
+    replay = synth_sessions(cfg, 2, turns, max_new_tokens=budget,
+                            think_s=200.0, stagger_s=60.0, seed=3)
+    for r in replay:
+        r.rid += 1000
+    reports = {}
+    for label, reqs in (("burst", burst), ("replay", replay)):
+        for pc in (False, True):
+            rep = reports[label, pc] = engines[pc].run(list(reqs))
+            assert rep.completed == len(reqs), (
+                f"{label} cache={pc}: {rep.completed}/{len(reqs)} finished"
+            )
+        toks_off = {m.rid: [int(t) for t in m.tokens]
+                    for m in reports[label, False].metrics}
+        toks_on = {m.rid: [int(t) for t in m.tokens]
+                   for m in reports[label, True].metrics}
+        for rid, want in toks_off.items():
+            assert toks_on[rid] == want, (
+                f"{label} request {rid}: cached tokens {toks_on[rid]} "
+                f"!= uncached {want}"
+            )
+    off, on = reports["burst", False], reports["burst", True]
+    assert on.peak_concurrency > off.peak_concurrency, (
+        f"cached peak_concurrency {on.peak_concurrency} <= uncached "
+        f"{off.peak_concurrency} at equal {args.num_pages}-page budget"
+    )
+    assert on.prefill_tokens_saved > 0, "cache on but no prefill saved"
+    warm = reports["replay", True].ttft_warm_samples_s()
+    cold = reports["replay", True].ttft_cold_samples_s()
+    assert warm and cold and max(warm) < min(cold), (
+        f"replay warm TTFT {warm} not strictly below cold {cold}"
+    )
+    print(
+        f"prefix-parity: {len(burst) + len(replay)} requests "
+        f"token-identical; burst concurrency {on.peak_concurrency} > "
+        f"{off.peak_concurrency} at {args.num_pages}-page budget, "
+        f"saved {on.prefill_tokens_saved} prefill tokens; replay warm "
+        f"TTFT {max(warm)}s < cold {min(cold)}s OK"
+    )
+    return 0
+
+
 def _inject(jsonl: str, factor: float) -> int:
     from repro.bench import write_jsonl
 
@@ -309,6 +402,14 @@ def main(argv: list[str] | None = None) -> int:
     )
     p.add_argument("--page-size", type=int, default=8)
     p.set_defaults(fn=check_paged_parity)
+
+    p = sub.add_parser(
+        "prefix-parity",
+        help="prefix cache: token parity + admits-more + warm TTFT wins",
+    )
+    p.add_argument("--page-size", type=int, default=8)
+    p.add_argument("--num-pages", type=int, default=16)
+    p.set_defaults(fn=check_prefix_parity)
 
     p = sub.add_parser(
         "inject-slowdown",
