@@ -25,7 +25,13 @@ applied to the paper's Tier-2 deployment axis:
   gated by ``tools/ci_checks.py prefix-parity``);
 * ``serving/multi_turn_replay``     — multi-turn session replay
   (``data/pipeline.synth_sessions``) off vs on: warm turns re-prefill
-  only the newest turn, so warm TTFT < cold TTFT on the same schedule.
+  only the newest turn, so warm TTFT < cold TTFT on the same schedule;
+* ``serving/chaos_soak``            — a deadline/priority burst through
+  the paged engine fault-free vs under the default seeded FaultPlan:
+  goodput under faults, outcome taxonomy, preemption/requeue counters,
+  and fault-recovery latency, with zero leaked pages asserted on both
+  records (token parity under chaos is gated by ``tools/ci_checks.py
+  chaos-parity``).
 
 Every record carries ``ttft_us`` (median time-to-first-token) and
 per-token ``p50_us``/``p95_us`` stamped from the decode-step samples;
@@ -297,6 +303,88 @@ def multi_turn_replay(wl: Workload):
             f"warm TTFT {warm} not strictly below cold TTFT {cold}")
         assert report.prefix_hit_rate > 0
     yield _record(f"serving/replay_{'on' if pc else 'off'}", report)
+
+
+# robustness counters stamped onto chaos_soak records only (the keys are
+# on every serving summary now, but the established scenarios keep their
+# blessed derived-key sets stable)
+_ROBUST_KEYS = ("n_timed_out", "n_preempted", "n_rejected", "n_failed",
+                "preemption_events", "requeues", "retries",
+                "faults_injected", "fault_recoveries",
+                "recovery_steps_mean", "recovery_steps_max", "pages_leaked")
+
+
+@functools.lru_cache(maxsize=1)
+def _chaos_engine():
+    """Paged engine under SimClock for the chaos soak: a deliberately
+    tight pool (12 usable pages ~= 3 concurrent requests across 2 lanes)
+    so injected pressure, refusals, and priority preemption actually
+    bite, and a deterministic schedule so the faulted/fault-free goodput
+    gap is structural, not host noise."""
+    from repro.launch.serve import build_engine
+    from repro.serving import SimClock
+
+    eng, cfg = build_engine(
+        ARCH, batch=2, prompt_len=18, max_new_tokens=6,
+        scheduler="paged", page_size=4, num_pages=13,
+        prefill_chunk_tokens=4, clock=SimClock(),
+        reduce_kw=dict(layers=2, d_model=64, vocab=128, d_ff=128))
+    return eng, cfg
+
+
+def _slo_burst(cfg, n=8):
+    """Staggered burst with deadlines and a half/half priority mix —
+    the workload every robustness knob (reaper, preemption, requeue,
+    fault containment) acts on."""
+    import numpy as np
+
+    from repro.serving import Request
+
+    rng = np.random.default_rng(13)
+    return [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab_size, 6 + 2 * (i % 3)
+                                        ).astype(np.int32),
+                    max_new_tokens=5 + (i % 2), arrival_s=0.5 * i,
+                    deadline_s=600.0, priority=2 * (i % 2))
+            for i in range(n)]
+
+
+@scenario(
+    "serving/chaos_soak",
+    tags=("tier2", "serving", "paged", "faults", "measured"),
+    paper_ref="Tier-2 deployment (goodput under injected faults)",
+    workloads=[Workload(label="baseline", arch=ARCH,
+                        knobs={"faults": False}),
+               Workload(label="chaos", arch=ARCH, knobs={"faults": True})])
+def chaos_soak(wl: Workload):
+    """The same deadline/priority burst fault-free vs under the default
+    seeded FaultPlan (alloc refusals, pool pressure, a slow step, a
+    prefill error, pool poisoning): the pair measures goodput under
+    faults and recovery latency. Both runs must drain the pool clean —
+    a leaked page here is a real engine bug, not chaos."""
+    from repro.serving import FaultPlan
+
+    faulted = wl.knobs["faults"]
+    eng, cfg = _chaos_engine()
+    eng.fault_plan = FaultPlan.default(seed=0) if faulted else None
+    try:
+        report = eng.run(_slo_burst(cfg))
+    finally:
+        eng.fault_plan = None
+    assert report.pages_leaked == 0, (
+        f"{report.pages_leaked} pages leaked (faults={faulted})")
+    s = report.summary()
+    if faulted:
+        assert s["faults_injected"] > 0, "fault plan injected nothing"
+        assert s["fault_recoveries"] == s["faults_injected"], (
+            f"unrecovered: {s['fault_recoveries']}/{s['faults_injected']}")
+    rec = _record(
+        f"serving/chaos_{'on' if faulted else 'off'}", report)
+    for key in _ROBUST_KEYS:            # faults_* absent on the baseline
+        if key in s:
+            v = s[key]
+            rec.derived[key] = round(v, 4) if isinstance(v, float) else v
+    yield rec
 
 
 @scenario(

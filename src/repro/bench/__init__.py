@@ -25,9 +25,9 @@ from repro.bench.compare import (CompareReport, CompareResult,  # noqa: F401
 from repro.bench.record import (CSV_HEADER, BenchRecord, env_fingerprint,
                                 read_jsonl, write_jsonl)
 from repro.bench.runner import (BenchRunner, CsvStdoutSink, JsonlSink,
-                                ListSink, RunSummary, TimingStats,
-                                run_benchmarks, run_with_devices,
-                                timeit_us)
+                                ListSink, RunSummary, ScenarioTimeout,
+                                TimingStats, run_benchmarks,
+                                run_with_devices, timeit_us)
 from repro.bench.scenario import (BENCH_MESH, BENCH_SHAPE, REGISTRY,
                                   Scenario, Workload, groups, mesh_str,
                                   names, only_matches, register, scenario,
@@ -36,7 +36,8 @@ from repro.bench.scenario import (BENCH_MESH, BENCH_SHAPE, REGISTRY,
 __all__ = [
     "BENCH_MESH", "BENCH_SHAPE", "BenchRecord", "BenchRunner", "CSV_HEADER",
     "CompareReport", "CompareResult", "CsvStdoutSink", "JsonlSink",
-    "ListSink", "REGISTRY", "RunSummary", "Scenario", "Thresholds",
+    "ListSink", "REGISTRY", "RunSummary", "Scenario", "ScenarioTimeout",
+    "Thresholds",
     "TimingStats", "Workload", "append_trajectory", "bless",
     "compare_record", "compare_records", "env_fingerprint", "fingerprint",
     "fingerprint_compatible", "groups", "load_baselines", "mesh_str",

@@ -17,8 +17,10 @@ Owns the measurement loop that used to be copy-pasted across the seven
 from __future__ import annotations
 
 import os
+import signal
 import subprocess
 import sys
+import threading
 import time
 import traceback
 from dataclasses import dataclass, field
@@ -153,6 +155,42 @@ class JsonlSink:
 
 
 # ------------------------------------------------------------------ runner
+class ScenarioTimeout(Exception):
+    """A workload exceeded the per-scenario wall-clock budget."""
+
+
+class _workload_deadline:
+    """SIGALRM-based wall-clock budget around one workload execution.
+
+    A hung scenario (deadlocked collective, runaway decode loop) would
+    otherwise stall the whole sweep; this turns it into a ``status:
+    "timeout"`` record so the remaining scenarios still run. No-op when
+    budget <= 0, off the main thread, or on platforms without SIGALRM —
+    in those cases the workload simply runs unbounded as before.
+    """
+
+    def __init__(self, budget_s: float) -> None:
+        self.budget_s = budget_s
+        self.armed = False
+
+    def __enter__(self) -> "_workload_deadline":
+        if (self.budget_s > 0 and hasattr(signal, "SIGALRM")
+                and threading.current_thread() is threading.main_thread()):
+            self._prev = signal.signal(signal.SIGALRM, self._fire)
+            signal.setitimer(signal.ITIMER_REAL, self.budget_s)
+            self.armed = True
+        return self
+
+    def __exit__(self, *exc) -> None:
+        if self.armed:
+            signal.setitimer(signal.ITIMER_REAL, 0.0)
+            signal.signal(signal.SIGALRM, self._prev)
+
+    def _fire(self, signum, frame) -> None:
+        raise ScenarioTimeout(
+            f"workload exceeded {self.budget_s:.0f}s budget")
+
+
 @dataclass
 class RunSummary:
     records: List[BenchRecord] = field(default_factory=list)
@@ -166,10 +204,18 @@ class RunSummary:
 class BenchRunner:
     """Execute scenarios and fan records out to sinks."""
 
+    #: default per-workload wall-clock budget (seconds); 0 disables
+    DEFAULT_TIMEOUT_S = 600.0
+
     def __init__(self, sinks: Sequence[Any] = (),
-                 env: Optional[Dict[str, Any]] = None) -> None:
+                 env: Optional[Dict[str, Any]] = None,
+                 timeout_s: Optional[float] = None) -> None:
         self.sinks = list(sinks)
         self.env = env_fingerprint() if env is None else env
+        if timeout_s is None:
+            timeout_s = float(os.environ.get(
+                "REPRO_SCENARIO_TIMEOUT_S", self.DEFAULT_TIMEOUT_S))
+        self.timeout_s = timeout_s
 
     # stamp scenario/workload provenance onto a record the fn yielded
     def _finalize(self, rec: BenchRecord, scen: Scenario,
@@ -217,12 +263,21 @@ class BenchRunner:
             else list(REGISTRY.values())
         for scen in scens:
             for wl in scen.workloads:
+                label = f"/{wl.label}" if wl.label else ""
                 try:
-                    for rec in scen.fn(wl):
-                        self._emit(self._finalize(rec, scen, wl), out)
+                    with _workload_deadline(self.timeout_s):
+                        for rec in scen.fn(wl):
+                            self._emit(self._finalize(rec, scen, wl), out)
+                except ScenarioTimeout as e:  # hung: record, keep sweeping
+                    out.failures.append(
+                        (f"{scen.name}{label}", str(e)[:200]))
+                    rec = BenchRecord(
+                        name=f"{scen.name}{label}/TIMEOUT",
+                        status="timeout", error=str(e)[:500],
+                        derived={"timeout_s": self.timeout_s})
+                    self._emit(self._finalize(rec, scen, wl), out)
                 except Exception as e:  # fail-soft: record, keep sweeping
                     traceback.print_exc(file=sys.stderr)
-                    label = f"/{wl.label}" if wl.label else ""
                     out.failures.append(
                         (f"{scen.name}{label}", str(e)[:200]))
                     err = BenchRecord(

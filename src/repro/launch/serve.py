@@ -12,10 +12,19 @@ For the paged scheduler, `--prefix-cache` turns on the prefix-sharing
 radix cache, and `--num-sessions N --turns T` swaps the Poisson request
 stream for a multi-turn session-replay workload (each turn arrives with
 its accumulated history — the pattern prefix sharing accelerates).
+
+SLO / robustness knobs: `--deadline S` gives every request a finish-by
+budget (missed = outcome `timed_out`, pages reaped); `--priority-mix
+"0:3,5:1"` assigns priorities by weight (higher preempts lower in the
+paged engine); `--fault-plan default|plan.json` runs the paged engine
+under a deterministic fault-injection schedule (see
+:mod:`repro.serving.faults`).
 """
 from __future__ import annotations
 
 import argparse
+
+import numpy as np
 
 import jax
 
@@ -24,7 +33,28 @@ from repro.data.pipeline import synth_requests, synth_sessions
 from repro.launch.mesh import make_mesh, set_mesh
 from repro.runtime.elastic import choose_mesh
 from repro.runtime.steps import build_serve_steps
-from repro.serving import make_engine
+from repro.serving import make_engine, resolve_fault_plan
+
+
+def apply_slo(requests, *, deadline_s: float = 0.0,
+              priority_mix: str = "", seed: int = 0):
+    """Decorate a workload with SLO fields: a uniform per-request
+    deadline (0 = none) and priorities drawn from a weighted mix
+    ``"prio:weight,prio:weight"`` (e.g. ``"0:3,5:1"`` = a quarter of
+    requests at priority 5). Deterministic in ``seed``; returns the
+    same Request objects, mutated in place."""
+    if deadline_s > 0:
+        for r in requests:
+            r.deadline_s = deadline_s
+    if priority_mix:
+        pairs = [p.split(":") for p in priority_mix.split(",")]
+        prios = np.array([int(p) for p, _ in pairs])
+        w = np.array([float(x) for _, x in pairs])
+        rng = np.random.default_rng(seed)
+        draw = rng.choice(len(prios), size=len(requests), p=w / w.sum())
+        for r, i in zip(requests, draw):
+            r.priority = int(prios[i])
+    return requests
 
 
 def build_engine(arch: str, *, batch: int, prompt_len: int,
@@ -33,7 +63,8 @@ def build_engine(arch: str, *, batch: int, prompt_len: int,
                  greedy: bool = True, eos_id=None, seed: int = 0,
                  clock=None, page_size: int = 16, num_pages=None,
                  prefill_chunk_tokens: int = 0,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False, fault_plan=None,
+                 reject_invalid: bool = False):
     """Build a serving engine for ``arch`` (the launcher's plumbing,
     importable so benchmarks and tests share it). ``reduce_kw`` overrides
     the reduction sizes (layers/d_model/vocab/d_ff — the benchmarks use a
@@ -56,14 +87,15 @@ def build_engine(arch: str, *, batch: int, prompt_len: int,
         prefill_fn, decode_fn, model = build_serve_steps(rcfg)
         params = model.init_params(jax.random.PRNGKey(seed))
     common = dict(slots=batch, cache_span=span, eos_id=eos_id,
-                  greedy=greedy, seed=seed, clock=clock)
+                  greedy=greedy, seed=seed, clock=clock,
+                  reject_invalid=reject_invalid)
     if scheduler == "paged":
         engine = make_engine(
             scheduler, model.prefill_chunk, model.decode_step_paged,
             params, model.paged_cache_init, page_size=page_size,
             num_pages=num_pages,
             prefill_chunk_tokens=prefill_chunk_tokens,
-            prefix_cache=prefix_cache, **common)
+            prefix_cache=prefix_cache, fault_plan=fault_plan, **common)
     else:
         engine = make_engine(scheduler, prefill_fn, decode_fn, params,
                              model.cache_init, **common)
@@ -100,6 +132,18 @@ def main(argv=None):
     ap.add_argument("--num-requests", type=int, default=8)
     ap.add_argument("--offered-load", type=float, default=0.0,
                     help="Poisson arrival rate in req/s (0 = burst at t=0)")
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="per-request finish-by budget in seconds from "
+                         "arrival (0 = no deadline); missed deadlines "
+                         "are reaped with outcome timed_out")
+    ap.add_argument("--priority-mix", default="",
+                    help="weighted priority classes as 'prio:weight,...' "
+                         "e.g. '0:3,5:1'; higher priority preempts lower "
+                         "under page pressure (paged scheduler)")
+    ap.add_argument("--fault-plan", default="none",
+                    help="'none', 'default' (the seeded standard chaos "
+                         "mix), or a FaultPlan JSON path; paged "
+                         "scheduler only")
     ap.add_argument("--eos-id", type=int, default=-1,
                     help="EOS token id for early termination (<0 disables)")
     ap.add_argument("--sample", action="store_true",
@@ -113,6 +157,9 @@ def main(argv=None):
     session_prompt_len = 32 + args.turns * 16    # synth_sessions defaults
     prompt_len = (session_prompt_len if args.num_sessions
                   else args.prompt_len)
+    fault_plan = resolve_fault_plan(args.fault_plan, args.seed)
+    if fault_plan is not None and args.scheduler != "paged":
+        ap.error("--fault-plan requires --scheduler paged")
     engine, cfg = build_engine(
         args.arch, batch=args.batch, prompt_len=prompt_len,
         max_new_tokens=args.max_new_tokens, scheduler=args.scheduler,
@@ -120,7 +167,7 @@ def main(argv=None):
         eos_id=args.eos_id if args.eos_id >= 0 else None, seed=args.seed,
         page_size=args.page_size, num_pages=args.num_pages or None,
         prefill_chunk_tokens=args.prefill_chunk,
-        prefix_cache=args.prefix_cache)
+        prefix_cache=args.prefix_cache, fault_plan=fault_plan)
     if args.num_sessions:
         requests = synth_sessions(cfg, args.num_sessions, args.turns,
                                   max_new_tokens=args.max_new_tokens,
@@ -131,6 +178,8 @@ def main(argv=None):
                                   max_new_tokens=args.max_new_tokens,
                                   rate_per_s=args.offered_load,
                                   seed=args.seed)
+    apply_slo(requests, deadline_s=args.deadline,
+              priority_mix=args.priority_mix, seed=args.seed)
     engine.warmup(prompt_len)
     report = engine.run(requests)
     s = report.summary()
@@ -151,6 +200,19 @@ def main(argv=None):
               f"(peak {s['page_occupancy_peak']:.2f}) "
               f"frag={s['fragmentation_mean']:.2f} "
               f"peak_concurrency={s['peak_concurrency']}")
+    if (args.deadline > 0 or args.priority_mix
+            or s.get("faults_injected")):
+        print(f"  outcomes: timed_out={s['n_timed_out']} "
+              f"preempted={s['n_preempted']} rejected={s['n_rejected']} "
+              f"failed={s['n_failed']}  "
+              f"preemptions={s['preemption_events']} "
+              f"requeues={s['requeues']} retries={s['retries']}")
+    if s.get("faults_injected"):
+        print(f"  faults: injected={s['faults_injected']} "
+              f"recovered={s['fault_recoveries']} "
+              f"recovery_steps mean={s['recovery_steps_mean']:.1f} "
+              f"max={s['recovery_steps_max']}  "
+              f"pages_leaked={s['pages_leaked']}")
     if s.get("prefix_lookups") is not None:
         print(f"  prefix hit_rate={s['prefix_hit_rate']:.2f} "
               f"({s['prefix_hits']}/{s['prefix_lookups']}) "

@@ -10,26 +10,37 @@ TTFT / per-token latency / goodput / slot-occupancy / page-pool metrics
 out to the benchmarks.
 """
 from repro.serving.engine import (SCHEDULERS, ContinuousEngine,
-                                  StaticEngine, decode_lockstep,
-                                  make_engine)
+                                  RequestQueue, StaticEngine,
+                                  decode_lockstep, make_engine)
+from repro.serving.faults import (FAULT_KINDS, Fault, FaultInjector,
+                                  FaultPlan, InjectedFault,
+                                  resolve_fault_plan)
 from repro.serving.paged import PagedEngine
 from repro.serving.pages import (PageAllocator, PoolInvariantError,
                                  pages_needed)
 from repro.serving.prefix import RadixCache
-from repro.serving.request import (Request, RequestMetrics, ServeReport,
-                                   SimClock, WallClock)
+from repro.serving.request import (OUTCOMES, Request, RequestMetrics,
+                                   ServeReport, SimClock, WallClock)
 
 __all__ = [
+    "FAULT_KINDS",
+    "Fault",
+    "FaultInjector",
+    "FaultPlan",
+    "InjectedFault",
+    "OUTCOMES",
     "SCHEDULERS",
     "ContinuousEngine",
     "PagedEngine",
     "PageAllocator",
     "PoolInvariantError",
     "RadixCache",
+    "RequestQueue",
     "StaticEngine",
     "decode_lockstep",
     "make_engine",
     "pages_needed",
+    "resolve_fault_plan",
     "Request",
     "RequestMetrics",
     "ServeReport",

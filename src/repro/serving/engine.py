@@ -31,8 +31,7 @@ pays for its occupancy win, and it is part of what we measure.
 """
 from __future__ import annotations
 
-from collections import deque
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -41,6 +40,49 @@ import jax.numpy as jnp
 
 from repro.serving.request import (Request, RequestMetrics, ServeReport,
                                    WallClock)
+
+
+class RequestQueue:
+    """Arrival-aware priority queue the continuous/paged schedulers admit
+    from. Among *arrived* requests the highest ``priority`` wins; ties
+    break by earliest arrival then lowest rid — so an all-default-priority
+    workload admits in exactly the old FIFO order. Requeues (preemption,
+    fault retry) :meth:`push` back with a fresh arrival time."""
+
+    def __init__(self, requests: Sequence[Request] = ()) -> None:
+        self._items: List[Request] = list(requests)
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+    def __bool__(self) -> bool:
+        return bool(self._items)
+
+    def push(self, req: Request) -> None:
+        self._items.append(req)
+
+    def remove(self, req: Request) -> None:
+        self._items.remove(req)
+
+    def next_arrival(self) -> float:
+        return min(r.arrival_s for r in self._items)
+
+    def peek_best(self, now_rel: float) -> Optional[Request]:
+        """Highest-priority request that has arrived by ``now_rel``."""
+        ready = [r for r in self._items if r.arrival_s <= now_rel]
+        if not ready:
+            return None
+        return min(ready, key=lambda r: (-r.priority, r.arrival_s, r.rid))
+
+    def pop_expired(self, now_rel: float) -> List[Request]:
+        """Remove and return queued requests already past their deadline —
+        admitting them would burn prefill on work that cannot meet its
+        SLO, so the reaper retires them straight from the queue."""
+        dead = [r for r in self._items
+                if r.deadline_abs_s is not None and now_rel > r.deadline_abs_s]
+        for r in dead:
+            self._items.remove(r)
+        return dead
 
 
 def _default_prompt_to_batch(prompts: np.ndarray) -> dict:
@@ -102,9 +144,13 @@ class _EngineBase:
     def __init__(self, prefill_fn: Callable, decode_fn: Callable, params,
                  cache_init: Callable, *, slots: int, cache_span: int,
                  eos_id: Optional[int] = None, greedy: bool = True,
-                 seed: int = 0, clock=None,
+                 seed: int = 0, clock=None, reject_invalid: bool = False,
                  prompt_to_batch: Callable = _default_prompt_to_batch):
         self.params = params
+        # reject_invalid=True turns impossible requests into outcome
+        # "rejected" metrics instead of a ValueError — the serving-facing
+        # mode; tests/tools keep the strict raise as their default
+        self.reject_invalid = reject_invalid
         self.cache_init = cache_init
         self.slots = slots
         self.cache_span = cache_span
@@ -152,13 +198,33 @@ class _EngineBase:
                     f"cache_span {self.cache_span}")
         return None
 
-    def _validate(self, requests: Sequence[Request]) -> List[Request]:
+    def _validate(self, requests: Sequence[Request]
+                  ) -> Tuple[List[Request], List[Request]]:
+        """Sort by arrival and split servable from impossible requests.
+        With ``reject_invalid`` the impossible ones come back in the
+        second list (outcome "rejected"); otherwise they raise."""
         reqs = sorted(requests, key=lambda r: (r.arrival_s, r.rid))
+        ok: List[Request] = []
+        rejected: List[Request] = []
         for r in reqs:
             err = self.admission_error(r)
-            if err:
+            if err and not self.reject_invalid:
                 raise ValueError(f"request {r.rid}: {err}")
-        return reqs
+            (rejected if err else ok).append(r)
+        return ok, rejected
+
+    @staticmethod
+    def _make_metrics(reqs: Sequence[Request], rejected: Sequence[Request]
+                      ) -> Dict[int, RequestMetrics]:
+        """Per-request metrics for a run; rejected requests are terminal
+        immediately (never admitted, never scheduled)."""
+        metrics = {
+            r.rid: RequestMetrics(rid=r.rid, prompt_len=r.prompt_len,
+                                  arrival_s=r.arrival_s)
+            for r in (*reqs, *rejected)}
+        for r in rejected:
+            metrics[r.rid].outcome = "rejected"
+        return metrics
 
     def _prefill_one_batch(self, prompts: np.ndarray, key):
         """Prefill (b, L) prompts; returns (tok0 (b,1), caches)."""
@@ -189,19 +255,24 @@ class StaticEngine(_EngineBase):
     slowest arrival), prefills together, and decodes to the longest budget
     in the batch; rows that finish early occupy their slot doing useless
     work until the batch drains. Requests within one batch must share a
-    prompt length (no padding path)."""
+    prompt length (no padding path).
+
+    SLO semantics: lockstep batches cannot free a row mid-flight, so
+    priorities are ignored (arrival-order batching — the baseline the
+    preempting schedulers are measured against) and deadlines are
+    enforced *post hoc*: a request whose batch finished past its deadline
+    is marked ``timed_out`` (its tokens were generated but missed the
+    SLO, so it does not count toward goodput)."""
 
     scheduler = "static"
 
     def run(self, requests: Sequence[Request]) -> ServeReport:
-        reqs = self._validate(requests)
+        reqs, rejected = self._validate(requests)
         B = self.slots
         clock = self.clock
         t0 = clock.now()
         key = jax.random.PRNGKey(self.seed)
-        metrics: Dict[int, RequestMetrics] = {
-            r.rid: RequestMetrics(rid=r.rid, prompt_len=r.prompt_len,
-                                  arrival_s=r.arrival_s) for r in reqs}
+        metrics = self._make_metrics(reqs, rejected)
         slot_tokens = np.zeros(B, np.int64)
         decode_steps = prefills = peak_conc = 0
 
@@ -248,9 +319,15 @@ class StaticEngine(_EngineBase):
                 m.slot, m.new_tokens, m.tokens = i, n, own[:n]
                 m.token_latencies_s = list(times[:n - 1])
                 m.finish_s = t_first + float(np.sum(times[:n - 1]))
-                m.finished = True
+                d = r.deadline_abs_s
+                if d is not None and m.finish_s > d:
+                    m.outcome = "timed_out"   # generated, but missed SLO
+                else:
+                    m.finished = True
+                    m.outcome = "completed"
                 slot_tokens[i] += n
-        return ServeReport(metrics=[metrics[r.rid] for r in reqs],
+        return ServeReport(metrics=[metrics[r.rid] for r in (*reqs,
+                                                             *rejected)],
                            scheduler=self.scheduler, slots=B,
                            makespan_s=clock.now() - t0,
                            decode_steps=decode_steps, prefills=prefills,
@@ -325,7 +402,7 @@ class ContinuousEngine(_EngineBase):
                        donate_argnums=(0, 1) if self._donate_ok else ())
 
     def run(self, requests: Sequence[Request]) -> ServeReport:
-        reqs = self._validate(requests)
+        reqs, rejected = self._validate(requests)
         B = self.slots
         clock = self.clock
         t0 = clock.now()
@@ -346,21 +423,46 @@ class ContinuousEngine(_EngineBase):
             "budget": jnp.ones((B,), jnp.int32),
             "tokbuf": jnp.zeros((B, T), jnp.int32),
         }
-        metrics: Dict[int, RequestMetrics] = {
-            r.rid: RequestMetrics(rid=r.rid, prompt_len=r.prompt_len,
-                                  arrival_s=r.arrival_s) for r in reqs}
-        queue = deque(reqs)
+        metrics = self._make_metrics(reqs, rejected)
+        req_of = {r.rid: r for r in reqs}
+        queue = RequestQueue(reqs)
         slot_rid: List[Optional[int]] = [None] * B
         active_host = np.zeros(B, bool)
         slot_tokens = np.zeros(B, np.int64)
         decode_steps = prefills = peak_conc = 0
+        has_deadlines = any(r.deadline_s is not None for r in reqs)
 
         while queue or active_host.any():
+            # ---- deadline reaper: queued then active requests past SLO
+            if has_deadlines:
+                now_rel = clock.now() - t0
+                for r in queue.pop_expired(now_rel):
+                    metrics[r.rid].outcome = "timed_out"
+                doomed = [int(s) for s in np.flatnonzero(active_host)
+                          if (d := req_of[slot_rid[s]].deadline_abs_s)
+                          is not None and now_rel > d]
+                if doomed:
+                    ncounts = np.asarray(state["ncount"])
+                    for s in doomed:
+                        m = metrics[slot_rid[s]]
+                        m.outcome = "timed_out"
+                        m.new_tokens = int(ncounts[s])
+                        m.finish_s = now_rel
+                        m.tokens = np.asarray(
+                            state["tokbuf"][s, :m.new_tokens])
+                        slot_rid[s] = None
+                        active_host[s] = False
+                    # retire the lanes on device too, so the pool step
+                    # stops advancing (and charging for) the dead rows
+                    keep = jnp.asarray(active_host)
+                    state["active"] = state["active"] & keep
             # ---- admission: free slot + arrived request -> prefill into it
-            while (queue and not active_host.all()
-                   and t0 + queue[0].arrival_s <= clock.now()):
+            while queue and not active_host.all():
+                req = queue.peek_best(clock.now() - t0)
+                if req is None:
+                    break
+                queue.remove(req)
                 slot = int(np.flatnonzero(~active_host)[0])
-                req = queue.popleft()
                 m = metrics[req.rid]
                 m.admitted_s = clock.now() - t0
                 m.slot = slot
@@ -385,6 +487,7 @@ class ContinuousEngine(_EngineBase):
                 slot_tokens[slot] += 1        # the prefill-produced token
                 if done0:
                     m.finished = True
+                    m.outcome = "completed"
                     m.finish_s = m.first_token_s
                     m.tokens = np.asarray([int(tok0[0, 0])], np.int32)
                 else:
@@ -392,7 +495,7 @@ class ContinuousEngine(_EngineBase):
                     slot_rid[slot] = req.rid
             if not active_host.any():
                 if queue:          # pool idle until the next arrival
-                    clock.wait_until(t0 + queue[0].arrival_s)
+                    clock.wait_until(t0 + queue.next_arrival())
                     continue
                 break
             # ---- one decode step over the whole pool
@@ -412,11 +515,13 @@ class ContinuousEngine(_EngineBase):
                 slot_tokens[s] += 1
                 if not new_active[s]:           # EOS or budget: retire slot
                     m.finished = True
+                    m.outcome = "completed"
                     m.finish_s = clock.now() - t0
                     m.tokens = np.asarray(state["tokbuf"][s, :m.new_tokens])
                     slot_rid[s] = None
             active_host = new_active.copy()
-        return ServeReport(metrics=[metrics[r.rid] for r in reqs],
+        return ServeReport(metrics=[metrics[r.rid] for r in (*reqs,
+                                                             *rejected)],
                            scheduler=self.scheduler, slots=B,
                            makespan_s=clock.now() - t0,
                            decode_steps=decode_steps, prefills=prefills,

@@ -51,7 +51,6 @@ triple, this engine takes the *paged* triple from
 """
 from __future__ import annotations
 
-from collections import deque
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
@@ -59,10 +58,13 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.serving.engine import SCHEDULERS, _EngineBase, _sample_tokens
-from repro.serving.pages import PageAllocator, PoolStats, pages_needed
+from repro.serving.engine import (RequestQueue, SCHEDULERS, _EngineBase,
+                                  _sample_tokens)
+from repro.serving.faults import FaultInjector, FaultPlan, InjectedFault
+from repro.serving.pages import (PageAllocator, PoolInvariantError, PoolStats,
+                                 pages_needed)
 from repro.serving.prefix import RadixCache
-from repro.serving.request import Request, RequestMetrics, ServeReport
+from repro.serving.request import Request, ServeReport
 
 
 class PagedEngine(_EngineBase):
@@ -81,8 +83,16 @@ class PagedEngine(_EngineBase):
                  slots: int, cache_span: int, page_size: int = 16,
                  num_pages: Optional[int] = None,
                  prefill_chunk_tokens: int = 0,
-                 prefix_cache: bool = False, **kw):
+                 prefix_cache: bool = False,
+                 fault_plan: Optional[FaultPlan] = None,
+                 requeue_backoff_s: float = 0.0, **kw):
         self.page_size = int(page_size)
+        # deterministic chaos: a FaultPlan makes run() consult a
+        # FaultInjector at every engine step (see repro.serving.faults)
+        self.fault_plan = fault_plan
+        # delay before a preempted/faulted request re-enters the queue
+        # (0.0 keeps SimClock schedules backoff-free and deterministic)
+        self.requeue_backoff_s = float(requeue_backoff_s)
         # block-table width: logical pages a maximal request can touch
         self.npag_max = -(-cache_span // self.page_size)
         if num_pages is None:
@@ -170,10 +180,42 @@ class PagedEngine(_EngineBase):
                 "btab": state["btab"].at[slot].set(btab_row),
             }
 
+        def evict(state, slot):
+            # retire one lane mid-flight (deadline reap / preemption):
+            # deactivate it and point its block-table row at the null
+            # page so a stale table can never touch a reissued page
+            return {
+                **state,
+                "active": state["active"].at[slot].set(False),
+                "btab": state["btab"].at[slot].set(
+                    jnp.zeros_like(state["btab"][0])),
+            }
+
         self._pool_step = jax.jit(
             pool_step, donate_argnums=(1, 2) if donate else ())
         self._admit = jax.jit(
             admit, donate_argnums=(0,) if donate else ())
+        self._jit_evict = jax.jit(
+            evict, donate_argnums=(0,) if donate else ())
+
+    def warmup(self, prompt_len: int) -> None:
+        # jit-compile warmup must not consume the fault schedule (every
+        # run() builds a fresh injector, but warming up under chaos
+        # would fail/requeue dummy requests for nothing)
+        plan, self.fault_plan = self.fault_plan, None
+        try:
+            super().warmup(prompt_len)
+        finally:
+            self.fault_plan = plan
+
+    # ----------------------------------------------------------- teardown
+    def _release_pages(self, alloc: PageAllocator, rid: int) -> None:
+        """Return a request's pages to the pool. Every terminal path
+        (completion, deadline reap, preemption, fault failure) releases
+        through this one seam — ``ci_checks.py chaos-parity`` self-tests
+        its leak detection by no-op'ing this method and requiring the
+        check to fail."""
+        alloc.free(rid)
 
     # ---------------------------------------------------------- prefill
     def _chunked_prefill(self, prompt: np.ndarray, btab_dev, clock, *,
@@ -243,7 +285,7 @@ class PagedEngine(_EngineBase):
 
     # -------------------------------------------------------------- run
     def run(self, requests: Sequence[Request]) -> ServeReport:
-        reqs = self._validate(requests)
+        reqs, rejected = self._validate(requests)
         B = self.slots
         clock = self.clock
         t0 = clock.now()
@@ -252,6 +294,7 @@ class PagedEngine(_EngineBase):
         self._caches = self.cache_init(self.num_pages, self.page_size)
         alloc = PageAllocator(self.num_pages, self.page_size)
         radix = RadixCache(alloc) if self.prefix_cache else None
+        inj = FaultInjector(self.fault_plan) if self.fault_plan else None
         stats = PoolStats()
         state = {
             "tok": jnp.zeros((B, 1), jnp.int32),
@@ -262,20 +305,43 @@ class PagedEngine(_EngineBase):
             "tokbuf": jnp.zeros((B, T), jnp.int32),
             "btab": jnp.zeros((B, self.npag_max), jnp.int32),
         }
-        metrics: Dict[int, RequestMetrics] = {
-            r.rid: RequestMetrics(rid=r.rid, prompt_len=r.prompt_len,
-                                  arrival_s=r.arrival_s) for r in reqs}
+        metrics = self._make_metrics(reqs, rejected)
+        # req_of/plen_of track the *current* incarnation of each request
+        # (a requeue replaces the entry with the extended-prompt version)
+        req_of = {r.rid: r for r in reqs}
         plen_of = {r.rid: r.prompt_len for r in reqs}
         prompt_of: Dict[int, np.ndarray] = {}
-        queue = deque(reqs)
+        # tokens a preempted/faulted request generated before eviction —
+        # its terminal metrics report the cumulative stream
+        partial: Dict[int, np.ndarray] = {}
+        queue = RequestQueue(reqs)
         slot_rid: List[Optional[int]] = [None] * B
+        admit_seq = [0] * B              # admission order, for victim choice
+        admissions = 0
         active_host = np.zeros(B, bool)
         slot_tokens = np.zeros(B, np.int64)
         decode_steps = prefills = peak_conc = blocked = 0
         lookups = hits = tokens_saved = 0
+        preempt_events = requeues = 0
+        has_deadlines = any(r.deadline_s is not None for r in reqs)
+        step = -1                        # engine step (admission or decode)
+
+        def audit() -> None:
+            """Under a fault plan the pool is re-checked at every event;
+            a poison fault is *supposed* to trip this — the injector
+            heals it and the pool must check clean again. A failure the
+            injector cannot heal is real corruption and escapes."""
+            if inj is None:
+                return
+            try:
+                alloc.check()
+            except PoolInvariantError:
+                if not inj.heal(alloc):
+                    raise
+                alloc.check()
 
         def index_sequence(rid: int, gen_tokens: np.ndarray) -> None:
-            """Index the retired request's full pages: its prompt plus
+            """Index the retiring request's full pages: its prompt plus
             every generated token whose K/V was written (the final
             sampled token never reaches the pool — no decode step
             consumed it)."""
@@ -284,23 +350,146 @@ class PagedEngine(_EngineBase):
                 np.asarray(gen_tokens[:-1], np.int32)])
             radix.insert(seq, alloc.owned(rid))
 
+        def cumulative(rid: int, gen: np.ndarray) -> np.ndarray:
+            prev = partial.get(rid)
+            gen = np.asarray(gen, np.int32)
+            return gen if prev is None else np.concatenate([prev, gen])
+
+        def requeue_or_fail(rid: int, gen: np.ndarray, now_rel: float,
+                            exhausted_outcome: str) -> None:
+            """Put an evicted request back in the queue with its
+            generated-so-far tokens appended to its prompt (greedy
+            re-prefill of the extended prompt reproduces the
+            continuation exactly — and warm-restarts through the radix
+            cache when enabled). After ``max_retries`` requeues the
+            request goes terminal instead."""
+            nonlocal requeues
+            r = req_of[rid]
+            m = metrics[rid]
+            cum = cumulative(rid, gen)
+            m.retries += 1
+            if m.retries > r.max_retries:
+                m.outcome = exhausted_outcome
+                m.finish_s = now_rel
+                m.new_tokens = len(cum)
+                m.tokens = cum
+                return
+            if len(gen):
+                partial[rid] = cum
+            arrival = now_rel + self.requeue_backoff_s
+            nr = Request(
+                rid=rid,
+                prompt=np.concatenate([np.asarray(r.prompt, np.int32),
+                                       np.asarray(gen, np.int32)]),
+                max_new_tokens=r.max_new_tokens - len(gen),
+                arrival_s=arrival,
+                # the *absolute* deadline survives the requeue (an SLO
+                # clock does not restart because the scheduler evicted)
+                deadline_s=(None if r.deadline_abs_s is None
+                            else r.deadline_abs_s - arrival),
+                priority=r.priority, max_retries=r.max_retries)
+            req_of[rid] = nr
+            plen_of[rid] = nr.prompt_len
+            queue.push(nr)
+            requeues += 1
+
+        def evict_lane(s: int, ncounts: np.ndarray) -> np.ndarray:
+            """Take lane ``s`` out of service mid-flight: index its pages
+            into the radix cache (so a requeue re-prefills warm), free
+            them, null the device row. Returns the generated tokens."""
+            rid = slot_rid[s]
+            n = int(ncounts[s])
+            gen = np.asarray(state["tokbuf"][s, :n])
+            if radix is not None:
+                index_sequence(rid, gen)
+            self._release_pages(alloc, rid)
+            slot_rid[s] = None
+            active_host[s] = False
+            return gen
+
+        def try_preempt(for_req: Request) -> bool:
+            """Evict the lowest-priority active request (ties: latest
+            admitted — least sunk prefill) iff it is strictly lower
+            priority than ``for_req``; the victim is requeued with its
+            progress as prompt extension."""
+            nonlocal preempt_events
+            cands = [s for s in range(B) if active_host[s]]
+            if not cands:
+                return False
+            victim = min(cands, key=lambda s: (
+                req_of[slot_rid[s]].priority, -admit_seq[s]))
+            if req_of[slot_rid[victim]].priority >= for_req.priority:
+                return False
+            ncounts = np.asarray(state["ncount"])
+            rid = slot_rid[victim]
+            gen = evict_lane(victim, ncounts)
+            state_new = self._jit_evict(state, victim)
+            state.update(state_new)
+            metrics[rid].preemptions += 1
+            preempt_events += 1
+            requeue_or_fail(rid, gen, clock.now() - t0, "preempted")
+            audit()
+            return True
+
         while queue or active_host.any():
-            # ---- admission: free lane + arrived request + enough pages
-            while (queue and not active_host.all()
-                   and t0 + queue[0].arrival_s <= clock.now()):
-                req = queue[0]
+            step += 1
+            if inj is not None:
+                inj.begin_step(step, alloc, clock)
+                audit()
+            # ---- deadline reaper: queued then active requests past SLO
+            if has_deadlines:
+                now_rel = clock.now() - t0
+                for r in queue.pop_expired(now_rel):
+                    m = metrics[r.rid]
+                    m.outcome = "timed_out"
+                    cum = cumulative(r.rid, np.zeros(0, np.int32))
+                    if len(cum):          # progress from before eviction
+                        m.new_tokens = len(cum)
+                        m.tokens = cum
+                        m.finish_s = now_rel
+                doomed = [int(s) for s in np.flatnonzero(active_host)
+                          if (d := req_of[slot_rid[s]].deadline_abs_s)
+                          is not None and now_rel > d]
+                if doomed:
+                    ncounts = np.asarray(state["ncount"])
+                    for s in doomed:
+                        rid = slot_rid[s]
+                        m = metrics[rid]
+                        gen = evict_lane(s, ncounts)
+                        state = self._jit_evict(state, s)
+                        cum = cumulative(rid, gen)
+                        m.outcome = "timed_out"
+                        m.new_tokens = len(cum)
+                        m.tokens = cum
+                        m.finish_s = now_rel
+                    audit()
+            # ---- admission: lane + arrived request + enough pages; a
+            # higher-priority arrival may preempt to make room for both
+            while queue:
+                now_rel = clock.now() - t0
+                req = queue.peek_best(now_rel)
+                if req is None:
+                    break
+                if active_host.all() and not try_preempt(req):
+                    break
+                if inj is not None and inj.refuse_alloc():
+                    blocked += 1     # transient injected refusal: retry
+                    break            # next engine step
                 got = self._reserve_pages(req, alloc, radix)
                 if radix is not None:
                     lookups += 1
+                while got is None and try_preempt(req):
+                    got = self._reserve_pages(req, alloc, radix)
                 if got is None:
-                    blocked += 1     # FIFO head waits for retirements
+                    blocked += 1     # queue head waits for retirements
                     break
                 pages, s0 = got
-                queue.popleft()
+                queue.remove(req)
                 prompt_np = np.asarray(req.prompt, np.int32)
                 prompt_of[req.rid] = prompt_np
                 slot = int(np.flatnonzero(~active_host)[0])
                 m = metrics[req.rid]
+                base = len(partial.get(req.rid, ()))
                 m.admitted_s = clock.now() - t0
                 m.slot = slot
                 m.cached_prompt_tokens = s0
@@ -311,15 +500,29 @@ class PagedEngine(_EngineBase):
                 btab_row = np.zeros(self.npag_max, np.int32)
                 btab_row[:len(pages)] = pages
                 btab_dev = jnp.asarray(btab_row)[None]
-                logits, chunks = self._chunked_prefill(
-                    prompt_np, btab_dev, clock, start=s0)
+                try:
+                    if inj is not None:
+                        inj.check_prefill()
+                    logits, chunks = self._chunked_prefill(
+                        prompt_np, btab_dev, clock, start=s0)
+                except InjectedFault:
+                    # contain the fault to this request: give back its
+                    # pages (un-prefilled — check_prefill fires before
+                    # any chunk writes) and retry or fail it alone
+                    self._release_pages(alloc, req.rid)
+                    audit()
+                    requeue_or_fail(req.rid, np.zeros(0, np.int32),
+                                    clock.now() - t0, "failed")
+                    inj.note_prefill_resolved(step)
+                    continue
                 prefills += chunks
                 if radix is not None:   # index the prompt's full pages
                     radix.insert(prompt_np, pages)
                 key, sub = jax.random.split(key)
                 tok0 = _sample_tokens(logits[:, -1:], sub, self.greedy)
-                m.first_token_s = clock.now() - t0
-                m.new_tokens = 1
+                if base == 0:
+                    m.first_token_s = clock.now() - t0
+                m.new_tokens = base + 1
                 done0 = req.max_new_tokens == 1
                 if self.eos_id is not None:
                     done0 = done0 or int(tok0[0, 0]) == self.eos_id
@@ -327,17 +530,28 @@ class PagedEngine(_EngineBase):
                                     req.prompt_len, req.max_new_tokens,
                                     not done0)
                 slot_tokens[slot] += 1
+                admissions += 1
+                admit_seq[slot] = admissions
+                if inj is not None:
+                    inj.note_admission(step)
                 if done0:
                     m.finished = True
-                    m.finish_s = m.first_token_s
-                    m.tokens = np.asarray([int(tok0[0, 0])], np.int32)
-                    alloc.free(req.rid)
+                    m.outcome = "completed"
+                    m.finish_s = clock.now() - t0
+                    m.tokens = cumulative(
+                        req.rid, np.asarray([int(tok0[0, 0])], np.int32))
+                    self._release_pages(alloc, req.rid)
+                    audit()
                 else:
                     active_host[slot] = True
                     slot_rid[slot] = req.rid
             if not active_host.any():
-                if queue:          # pool idle until the next arrival
-                    clock.wait_until(t0 + queue[0].arrival_s)
+                if queue:
+                    # pool idle until the next arrival; when admission is
+                    # blocked by an injected fault instead, fall through —
+                    # the engine-step counter keeps advancing so timed
+                    # faults (pressure windows, refusals) can drain
+                    clock.wait_until(t0 + queue.next_arrival())
                     continue
                 break
             # ---- one decode step over all lanes
@@ -352,25 +566,30 @@ class PagedEngine(_EngineBase):
             new_active = np.asarray(state["active"])
             ncounts = np.asarray(state["ncount"])
             for s in np.flatnonzero(active_host):
-                m = metrics[slot_rid[s]]
+                rid = slot_rid[s]
+                m = metrics[rid]
+                base = len(partial.get(rid, ()))
                 m.token_latencies_s.append(dur)
-                m.new_tokens = int(ncounts[s])
+                m.new_tokens = base + int(ncounts[s])
                 slot_tokens[s] += 1
                 if not new_active[s]:         # EOS or budget: free pages
                     m.finished = True
+                    m.outcome = "completed"
                     m.finish_s = clock.now() - t0
-                    m.tokens = np.asarray(state["tokbuf"][s, :m.new_tokens])
+                    gen = np.asarray(state["tokbuf"][s, :int(ncounts[s])])
+                    m.tokens = cumulative(rid, gen)
                     if radix is not None:
-                        index_sequence(slot_rid[s], m.tokens)
-                    alloc.free(slot_rid[s])
+                        index_sequence(rid, gen)
+                    self._release_pages(alloc, rid)
+                    audit()
                     slot_rid[s] = None
-            active_host = new_active.copy()
+            active_host = new_active.copy() & active_host
             live = sum(plen_of[slot_rid[s]] + int(ncounts[s])
                        for s in np.flatnonzero(active_host))
             stats.sample(alloc, live)
         self._caches = None          # free the pool between runs
         return ServeReport(
-            metrics=[metrics[r.rid] for r in reqs],
+            metrics=[metrics[r.rid] for r in (*reqs, *rejected)],
             scheduler=self.scheduler, slots=B,
             makespan_s=clock.now() - t0, decode_steps=decode_steps,
             prefills=prefills, slot_tokens=slot_tokens,
@@ -387,7 +606,12 @@ class PagedEngine(_EngineBase):
             prefix_lookups=lookups, prefix_hits=hits,
             prefill_tokens_saved=tokens_saved,
             pages_shared_peak=stats.pages_shared_peak,
-            prefix_evictions=radix.evictions if radix else 0)
+            prefix_evictions=radix.evictions if radix else 0,
+            preemption_events=preempt_events, requeues=requeues,
+            pages_leaked=alloc.owned_pages,
+            faults_injected=inj.injected if inj else 0,
+            fault_recoveries=inj.recoveries if inj else 0,
+            fault_recovery_steps=inj.recovery_steps() if inj else [])
 
 
 SCHEDULERS["paged"] = PagedEngine

@@ -40,6 +40,7 @@ being written through a stale table.
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass, field
 from typing import Dict, List, Sequence
 
@@ -91,6 +92,15 @@ class PageAllocator:
         self._refs: Dict[int, int] = {}             # page id -> refcount
         self.high_water = 0                         # peak pages in use
         self.failed_allocs = 0
+        # pages temporarily withheld from allocation (fault injection /
+        # external memory pressure): num_free shrinks but the pages stay
+        # on the free list, so check() invariants are untouched
+        self.pressure = 0
+        # REPRO_DEBUG_POOL=1: re-verify the pool invariants on every
+        # mutation, so a corruption raises at the faulting call site
+        # instead of at the next explicit check() (env-gated — the
+        # full-pool scan is O(pages) and would tax the decode hot path)
+        self._audit = os.environ.get("REPRO_DEBUG_POOL") == "1"
 
     # ------------------------------------------------------------ queries
     @property
@@ -99,7 +109,9 @@ class PageAllocator:
 
     @property
     def num_free(self) -> int:
-        return len(self._free)
+        """Pages available to allocate — the free list minus any
+        withheld under :attr:`pressure`."""
+        return max(0, len(self._free) - self.pressure)
 
     @property
     def num_used(self) -> int:
@@ -108,6 +120,13 @@ class PageAllocator:
     @property
     def num_owners(self) -> int:
         return len(self._owned)
+
+    @property
+    def owned_pages(self) -> int:
+        """Distinct pages still held by owners — nonzero after a drained
+        run means the engine leaked (the chaos checks' leak metric;
+        ownerless prefix-cache holds are intentionally not counted)."""
+        return len({p for pages in self._owned.values() for p in pages})
 
     def pages_needed(self, tokens: int) -> int:
         return pages_needed(tokens, self.page_size)
@@ -169,11 +188,11 @@ class PageAllocator:
                 raise ValueError(
                     f"owner {owner}: shared page {p} is not issued")
         fresh_n = total - len(shared)
-        if fresh_n > len(self._free):
+        if fresh_n > self.num_free:
             self.failed_allocs += 1
             raise MemoryError(
                 f"owner {owner}: need {fresh_n} fresh pages "
-                f"(+{len(shared)} shared), only {len(self._free)} "
+                f"(+{len(shared)} shared), only {self.num_free} "
                 f"of {self.usable_pages} free")
         fresh = [self._free.pop() for _ in range(fresh_n)]
         for p in shared:
@@ -182,6 +201,8 @@ class PageAllocator:
             self._refs[p] = 1
         self._owned[owner] = shared + fresh
         self.high_water = max(self.high_water, self.num_used)
+        if self._audit:
+            self.check()
         return list(shared + fresh)
 
     def share(self, pages: Sequence[int]) -> None:
@@ -194,6 +215,8 @@ class PageAllocator:
                 raise ValueError(f"cannot share page {p}: not issued")
         for p in pages:
             self._refs[p] += 1
+        if self._audit:
+            self.check()
 
     def release(self, pages: Sequence[int]) -> List[int]:
         """Drop one reference per page; pages reaching refcount 0 return
@@ -211,6 +234,8 @@ class PageAllocator:
                 freed.append(p)
             else:
                 self._refs[p] = c - 1
+        if self._audit:
+            self.check()     # free()/retire routes through here too
         return freed
 
     def free(self, owner: int) -> List[int]:

@@ -27,6 +27,14 @@ everything the request wrote), so sharing is read-only by construction.
 The divergence *inside* a page is the engine's job — it copies the page
 before writing into it (copy-on-write, see
 :class:`repro.serving.paged.PagedEngine`).
+
+The cache is also the engine's warm-restart path for fault tolerance:
+a request evicted mid-decode (deadline reap or priority preemption)
+has its prompt + generated-so-far tokens indexed *before* its pages are
+freed — the ownerless cache refcount keeps those pages resident — so
+when the preempted request requeues with its progress appended to the
+prompt, admission matches the indexed prefix and re-prefills only the
+final partial page instead of the whole extended prompt.
 """
 from __future__ import annotations
 

@@ -26,16 +26,40 @@ import numpy as np
 
 @dataclass
 class Request:
-    """One inference request: token prompt + decode budget + arrival."""
+    """One inference request: token prompt + decode budget + arrival.
+
+    The SLO fields drive the fault-tolerant scheduling layer:
+    ``deadline_s`` is a per-request latency budget measured *from
+    arrival* (the request must finish by ``arrival_s + deadline_s`` on
+    the engine clock; ``None`` = no deadline); ``priority`` orders
+    admission (higher wins) and decides who gets preempted under page
+    pressure; ``max_retries`` bounds how many times a preempted or
+    fault-hit request is requeued before it is failed outright.
+    """
 
     rid: int
     prompt: np.ndarray              # (prompt_len,) int32 token ids
     max_new_tokens: int
     arrival_s: float = 0.0          # offered-load arrival time
+    deadline_s: Optional[float] = None  # finish-by budget from arrival
+    priority: int = 0               # higher = more important
+    max_retries: int = 2            # requeues before outcome "failed"
 
     @property
     def prompt_len(self) -> int:
         return int(np.asarray(self.prompt).shape[-1])
+
+    @property
+    def deadline_abs_s(self) -> Optional[float]:
+        """Absolute finish-by time on the engine clock (run-relative)."""
+        if self.deadline_s is None:
+            return None
+        return self.arrival_s + self.deadline_s
+
+
+# terminal states a request can reach — what ``RequestMetrics.outcome``
+# holds and what the ServeReport taxonomy counts
+OUTCOMES = ("completed", "timed_out", "preempted", "rejected", "failed")
 
 
 @dataclass
@@ -51,6 +75,13 @@ class RequestMetrics:
     new_tokens: int = 0             # tokens actually generated (<= budget)
     slot: int = -1                  # KV slot that served it
     finished: bool = False
+    # terminal outcome ("" while in flight): completed | timed_out |
+    # preempted (evicted, never resumed to completion) | rejected
+    # (inadmissible, never scheduled) | failed (retries exhausted or an
+    # injected/unrecoverable per-request fault)
+    outcome: str = ""
+    preemptions: int = 0            # times evicted from a decode lane
+    retries: int = 0                # times requeued (preemption or fault)
     # prompt tokens served from the prefix cache (0 = cold prefill; >0
     # means only the suffix was chunk-prefilled — the warm-TTFT lever)
     cached_prompt_tokens: int = 0
@@ -141,10 +172,32 @@ class ServeReport:
     prefill_tokens_saved: int = 0      # prompt tokens not re-prefilled
     pages_shared_peak: int = 0         # peak logical-minus-physical pages
     prefix_evictions: int = 0          # LRU evictions under pool pressure
+    # ---- robustness: SLO enforcement + preemption + fault injection ---
+    preemption_events: int = 0         # evictions of an active request
+    requeues: int = 0                  # preempted/faulted requests requeued
+    pages_leaked: int = 0              # owner-held pages left at drain
+    faults_injected: int = 0           # FaultPlan events actually applied
+    fault_recoveries: int = 0          # faults the engine recovered from
+    # decode steps from each fault's injection to its recovery (the
+    # chaos_soak scenario's recovery-latency metric)
+    fault_recovery_steps: List[int] = field(default_factory=list)
 
     @property
     def completed(self) -> int:
         return sum(1 for m in self.metrics if m.finished)
+
+    def outcome_counts(self) -> dict:
+        """Requests per terminal outcome (see ``OUTCOMES``)."""
+        counts = {k: 0 for k in OUTCOMES}
+        for m in self.metrics:
+            key = m.outcome or ("completed" if m.finished else "")
+            if key in counts:
+                counts[key] += 1
+        return counts
+
+    @property
+    def total_retries(self) -> int:
+        return sum(m.retries for m in self.metrics)
 
     @property
     def total_new_tokens(self) -> int:
@@ -217,6 +270,25 @@ class ServeReport:
             "tok_p50_s": pct(tl, 50.0),
             "tok_p95_s": pct(tl, 95.0),
         }
+        oc = self.outcome_counts()
+        out.update({
+            "n_timed_out": oc["timed_out"],
+            "n_preempted": oc["preempted"],
+            "n_rejected": oc["rejected"],
+            "n_failed": oc["failed"],
+            "preemption_events": self.preemption_events,
+            "requeues": self.requeues,
+            "retries": self.total_retries,
+        })
+        if self.faults_injected:
+            rs = self.fault_recovery_steps
+            out.update({
+                "faults_injected": self.faults_injected,
+                "fault_recoveries": self.fault_recoveries,
+                "recovery_steps_mean": (sum(rs) / len(rs)) if rs else 0.0,
+                "recovery_steps_max": max(rs, default=0),
+                "pages_leaked": self.pages_leaked,
+            })
         if self.num_pages:
             out.update({
                 "page_size": self.page_size,

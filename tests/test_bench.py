@@ -185,6 +185,45 @@ def test_runner_end_to_end_with_sinks(tmp_path, capsys):
     assert out[1] == "_test/ok/w0,1.0,x=7"
 
 
+def test_runner_scenario_timeout_records_and_continues(monkeypatch):
+    """A hung workload becomes a ``status: "timeout"`` record and the
+    sweep still runs the scenarios after it (S-curve soak runs must not
+    wedge the whole matrix behind one deadlocked cell)."""
+    import time as _time
+
+    def hang(wl):
+        _time.sleep(30.0)
+        yield BenchRecord(name="_test/hang/never")  # pragma: no cover
+
+    hung = Scenario(name="_test/hang", fn=hang, group="_test",
+                    workloads=(Workload(label="w0"),))
+    ok, _ = _tiny_scenarios()
+    summary = BenchRunner(timeout_s=0.2).run([hung, ok])
+
+    assert [n for n, _ in summary.failures] == ["_test/hang/w0"]
+    timeouts = [r for r in summary.records if r.status == "timeout"]
+    assert len(timeouts) == 1
+    assert timeouts[0].name == "_test/hang/w0/TIMEOUT"
+    assert timeouts[0].derived["timeout_s"] == 0.2
+    assert "0s budget" in timeouts[0].error
+    # the sweep continued past the hang
+    assert [r.name for r in summary.records if r.status == "ok"] \
+        == ["_test/ok/w0"]
+    # env override feeds the default budget
+    monkeypatch.setenv("REPRO_SCENARIO_TIMEOUT_S", "7.5")
+    assert BenchRunner().timeout_s == 7.5
+
+
+def test_runner_timeout_disarmed_after_workload():
+    """The alarm is always cancelled — a fast workload must not leave a
+    pending SIGALRM to kill unrelated code later."""
+    import signal as _signal
+
+    ok, _ = _tiny_scenarios()
+    BenchRunner(timeout_s=0.05).run([ok])
+    assert _signal.getitimer(_signal.ITIMER_REAL) == (0.0, 0.0)
+
+
 def test_runner_record_knobs_override_workload_knobs():
     scen = Scenario(
         name="_test/knobs",

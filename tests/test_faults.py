@@ -1,0 +1,378 @@
+"""Fault-tolerant serving: deadlines, priorities, preempt-and-requeue,
+and the deterministic fault-injection harness (repro.serving.faults).
+
+The load-bearing property is *chaos parity*: under every fault kind in
+the default FaultPlan the paged engine must (a) contain each fault to
+one request (retry/requeue or fail it alone), (b) keep the page pool
+invariant-clean after every fault, (c) leak zero pages at drain, and
+(d) emit byte-identical tokens for surviving requests vs a fault-free
+run — faults may perturb scheduling, never numerics."""
+import numpy as np
+import pytest
+
+from test_paged import _paged_stub_engine, _tiny_serve
+from test_serving import stub_cache_init, stub_decode, stub_prefill
+
+from repro.serving import (Fault, FaultInjector, FaultPlan, InjectedFault,
+                           ContinuousEngine, PageAllocator, PagedEngine,
+                           PoolInvariantError, Request, RequestQueue,
+                           SimClock, StaticEngine, resolve_fault_plan)
+
+
+def _req(rid, plen=8, budget=4, arrival=0.0, **kw):
+    return Request(rid=rid, prompt=np.arange(1, plen + 1, dtype=np.int32),
+                   max_new_tokens=budget, arrival_s=arrival, **kw)
+
+
+def _outcomes(report):
+    return {m.rid: m.outcome for m in report.metrics}
+
+
+# ------------------------------------------------------------ FaultPlan
+def test_fault_plan_json_roundtrip(tmp_path):
+    plan = FaultPlan.default(seed=3)
+    path = plan.to_json(tmp_path / "plan.json")
+    back = FaultPlan.from_json(path)
+    assert back == plan
+    assert resolve_fault_plan(None) is None
+    assert resolve_fault_plan("none") is None
+    assert resolve_fault_plan("default", 3) == plan
+    assert resolve_fault_plan(str(path)) == plan
+
+
+def test_fault_plan_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        Fault(step=0, kind="cosmic_ray")
+
+
+def test_default_plan_covers_every_kind():
+    kinds = {f.kind for f in FaultPlan.default().faults}
+    assert kinds == {"alloc_refusal", "pool_pressure", "slow_step",
+                     "prefill_error", "poison_pool"}
+
+
+# --------------------------------------------------------- RequestQueue
+def test_request_queue_priority_and_fifo_ties():
+    q = RequestQueue([_req(0, arrival=0.0), _req(1, arrival=1.0),
+                      _req(2, arrival=2.0, priority=5)])
+    assert q.peek_best(0.5).rid == 0          # only arrival 0 is ready
+    assert q.peek_best(2.5).rid == 2          # highest priority wins
+    q.remove(q.peek_best(2.5))
+    assert q.peek_best(2.5).rid == 0          # ties: earliest arrival
+    assert q.next_arrival() == 0.0
+
+
+def test_request_queue_pop_expired():
+    q = RequestQueue([_req(0, deadline_s=5.0), _req(1, deadline_s=50.0),
+                      _req(2)])
+    dead = q.pop_expired(10.0)
+    assert [r.rid for r in dead] == [0]
+    assert len(q) == 2
+    assert q.pop_expired(3.0) == []
+
+
+# ------------------------------------------------------------ deadlines
+def test_continuous_deadline_times_out_mid_decode():
+    """SimClock: prefill 10s + 1s/token. A 12s deadline lets ~2 tokens
+    out before the reaper retires the lane; a lax deadline completes."""
+    eng = ContinuousEngine(stub_prefill, stub_decode, None, stub_cache_init,
+                           slots=2, cache_span=32, clock=SimClock())
+    rep = eng.run([_req(0, budget=8, deadline_s=12.0),
+                   _req(1, budget=8, deadline_s=100.0)])
+    out = _outcomes(rep)
+    assert out[0] == "timed_out" and out[1] == "completed"
+    m0 = next(m for m in rep.metrics if m.rid == 0)
+    assert not m0.finished and 0 < m0.new_tokens < 8
+    assert m0.tokens is not None and len(m0.tokens) == m0.new_tokens
+    assert rep.summary()["n_timed_out"] == 1
+
+
+def test_paged_deadline_reap_frees_pages_for_waiting_request():
+    """The pool only fits one request; when the head misses its deadline
+    its pages are reaped and the queued request admits and completes."""
+    eng = _paged_stub_engine(slots=2, cache_span=16, page_size=4,
+                             num_pages=5)
+    rep = eng.run([_req(0, plen=8, budget=8, deadline_s=13.0),
+                   _req(1, plen=8, budget=8, arrival=1.0)])
+    out = _outcomes(rep)
+    assert out[0] == "timed_out" and out[1] == "completed"
+    assert rep.pages_leaked == 0
+    assert rep.completed == 1
+
+
+def test_paged_deadline_expires_in_queue():
+    """A queued request whose deadline passes before any pages free is
+    reaped without ever being admitted (no prefill burned on it)."""
+    eng = _paged_stub_engine(slots=2, cache_span=16, page_size=4,
+                             num_pages=5)
+    rep = eng.run([_req(0, plen=8, budget=8),
+                   _req(1, plen=8, budget=8, arrival=1.0, deadline_s=3.0)])
+    m1 = next(m for m in rep.metrics if m.rid == 1)
+    assert m1.outcome == "timed_out"
+    assert m1.admitted_s == 0.0 and m1.new_tokens == 0
+    assert rep.pages_leaked == 0
+
+
+def test_static_deadline_marked_post_hoc():
+    """Lockstep batches cannot evict mid-flight: a missed deadline is
+    detected after the batch drains and excluded from goodput."""
+    eng = StaticEngine(stub_prefill, stub_decode, None, stub_cache_init,
+                       slots=2, cache_span=32, clock=SimClock())
+    rep = eng.run([_req(0, budget=8, deadline_s=5.0),
+                   _req(1, budget=8)])
+    out = _outcomes(rep)
+    assert out[0] == "timed_out" and out[1] == "completed"
+    assert rep.completed == 1
+
+
+# ----------------------------------------------------------- priorities
+def test_paged_preempts_lower_priority_for_pages():
+    """Pool fits one request. A higher-priority arrival evicts the
+    running low-priority request, which requeues with its progress as a
+    prompt extension and finishes after the VIP drains."""
+    eng = _paged_stub_engine(slots=2, cache_span=16, page_size=4,
+                             num_pages=5)
+    rep = eng.run([_req(0, plen=8, budget=8),
+                   _req(1, plen=8, budget=8, arrival=1.0, priority=5)])
+    out = _outcomes(rep)
+    assert out == {0: "completed", 1: "completed"}
+    assert rep.preemption_events == 1 and rep.requeues == 1
+    m0, m1 = (next(m for m in rep.metrics if m.rid == r) for r in (0, 1))
+    assert m0.preemptions == 1 and m0.retries == 1
+    assert m1.preemptions == 0
+    # the VIP's first token beats the victim's finish
+    assert m1.first_token_s < m0.finish_s
+    # the victim still delivered its full budget across both stints
+    assert m0.new_tokens == 8 and len(m0.tokens) == 8
+    assert rep.pages_leaked == 0
+    s = rep.summary()
+    assert s["preemption_events"] == 1 and s["retries"] == 1
+
+
+def test_paged_no_preemption_between_equal_priorities():
+    eng = _paged_stub_engine(slots=2, cache_span=16, page_size=4,
+                             num_pages=5)
+    rep = eng.run([_req(0, plen=8, budget=8),
+                   _req(1, plen=8, budget=8, arrival=1.0)])
+    assert rep.preemption_events == 0
+    assert _outcomes(rep) == {0: "completed", 1: "completed"}
+
+
+def test_paged_preemption_retries_bounded():
+    """max_retries=0: the first preemption is terminal — outcome
+    `preempted`, partial tokens kept, pages returned."""
+    eng = _paged_stub_engine(slots=2, cache_span=16, page_size=4,
+                             num_pages=5)
+    rep = eng.run([_req(0, plen=8, budget=8, max_retries=0),
+                   _req(1, plen=8, budget=8, arrival=1.0, priority=5)])
+    out = _outcomes(rep)
+    assert out[0] == "preempted" and out[1] == "completed"
+    m0 = next(m for m in rep.metrics if m.rid == 0)
+    assert not m0.finished and m0.new_tokens >= 1
+    assert rep.pages_leaked == 0
+    assert rep.summary()["n_preempted"] == 1
+
+
+# ------------------------------------------------------------ rejection
+def test_reject_invalid_outcome_instead_of_raise():
+    eng = ContinuousEngine(stub_prefill, stub_decode, None, stub_cache_init,
+                           slots=2, cache_span=16, clock=SimClock(),
+                           reject_invalid=True)
+    rep = eng.run([_req(0, plen=8, budget=4),
+                   _req(1, plen=8, budget=400)])       # cannot ever fit
+    out = _outcomes(rep)
+    assert out[0] == "completed" and out[1] == "rejected"
+    assert rep.summary()["n_rejected"] == 1
+    # strict default still raises
+    strict = ContinuousEngine(stub_prefill, stub_decode, None,
+                              stub_cache_init, slots=2, cache_span=16,
+                              clock=SimClock())
+    with pytest.raises(ValueError, match="exceeds"):
+        strict.run([_req(1, plen=8, budget=400)])
+
+
+# ------------------------------------------------------- fault injection
+def _chaos_engine(plan, **kw):
+    kw.setdefault("slots", 2)
+    kw.setdefault("cache_span", 16)
+    kw.setdefault("page_size", 4)
+    return _paged_stub_engine(fault_plan=plan, **kw)
+
+
+def test_alloc_refusal_blocks_then_recovers():
+    plan = FaultPlan(faults=[Fault(step=0, kind="alloc_refusal", count=2)])
+    eng = _chaos_engine(plan)
+    rep = eng.run([_req(0), _req(1)])
+    assert _outcomes(rep) == {0: "completed", 1: "completed"}
+    assert rep.faults_injected == 1 and rep.fault_recoveries == 1
+    assert rep.admission_blocked_steps >= 2       # the two refusals
+    assert rep.pages_leaked == 0
+
+
+def test_pool_pressure_window_blocks_admission():
+    plan = FaultPlan(faults=[
+        Fault(step=0, kind="pool_pressure", pages=100, duration=2)])
+    eng = _chaos_engine(plan)
+    rep = eng.run([_req(0, budget=4)])
+    assert _outcomes(rep) == {0: "completed"}
+    assert rep.faults_injected == 1 and rep.fault_recoveries == 1
+    assert rep.admission_blocked_steps == 2
+    assert rep.fault_recovery_steps == [2]        # lifted at step 2
+    assert rep.pages_leaked == 0
+
+
+def test_slow_step_stalls_clock_deterministically():
+    base = _chaos_engine(None).run([_req(0, budget=4)])
+    plan = FaultPlan(faults=[Fault(step=1, kind="slow_step", stall_s=7.0)])
+    rep = _chaos_engine(plan).run([_req(0, budget=4)])
+    assert rep.makespan_s == pytest.approx(base.makespan_s + 7.0)
+    assert rep.faults_injected == 1 and rep.fault_recoveries == 1
+    np.testing.assert_array_equal(rep.metrics[0].tokens,
+                                  base.metrics[0].tokens)
+
+
+def test_prefill_error_requeues_that_request_only():
+    plan = FaultPlan(faults=[
+        Fault(step=0, kind="prefill_error", req_index=0)])
+    eng = _chaos_engine(plan)
+    rep = eng.run([_req(0), _req(1, arrival=1.0)])
+    assert _outcomes(rep) == {0: "completed", 1: "completed"}
+    m0 = next(m for m in rep.metrics if m.rid == 0)
+    assert m0.retries == 1
+    assert rep.requeues == 1
+    assert rep.faults_injected == 1 and rep.fault_recoveries == 1
+    assert rep.pages_leaked == 0
+
+
+def test_prefill_error_exhausted_retries_fails_alone():
+    plan = FaultPlan(faults=[
+        Fault(step=0, kind="prefill_error", req_index=0)])
+    eng = _chaos_engine(plan)
+    rep = eng.run([_req(0, max_retries=0), _req(1, arrival=1.0)])
+    out = _outcomes(rep)
+    assert out[0] == "failed" and out[1] == "completed"
+    assert rep.summary()["n_failed"] == 1
+    assert rep.pages_leaked == 0
+
+
+def test_poison_pool_detected_and_healed():
+    plan = FaultPlan(faults=[Fault(step=2, kind="poison_pool")])
+    eng = _chaos_engine(plan)
+    rep = eng.run([_req(0, budget=6)])
+    assert _outcomes(rep) == {0: "completed"}
+    assert rep.faults_injected == 1 and rep.fault_recoveries == 1
+    assert rep.pages_leaked == 0
+
+
+def test_real_corruption_still_escapes():
+    """heal() only undoes the injector's own poison — corruption the
+    injector did not cause must raise out of the engine."""
+    alloc = PageAllocator(num_pages=5, page_size=4)
+    alloc.allocate(0, 8)
+    inj = FaultInjector(FaultPlan())
+    alloc._free.append(1)                     # corruption with no poison
+    with pytest.raises(PoolInvariantError):
+        try:
+            alloc.check()
+        except PoolInvariantError:
+            if not inj.heal(alloc):
+                raise
+
+
+def test_injected_fault_is_distinct_exception():
+    assert issubclass(InjectedFault, RuntimeError)
+    inj = FaultInjector(FaultPlan(faults=[
+        Fault(step=0, kind="prefill_error", req_index=0)]))
+    inj.begin_step(0, PageAllocator(5, 4), SimClock())
+    with pytest.raises(InjectedFault):
+        inj.check_prefill()
+    inj.check_prefill()                       # consumed: second is clean
+
+
+def test_default_plan_full_chaos_drains_clean():
+    """The standard chaos mix over a contended workload: every request
+    reaches a terminal outcome, the pool drains with zero leaks, and
+    every fault recovers."""
+    eng = _chaos_engine(FaultPlan.default(seed=0), num_pages=9)
+    reqs = [_req(i, plen=8, budget=6, arrival=0.5 * i,
+                 priority=i % 2) for i in range(5)]
+    rep = eng.run(reqs)
+    assert rep.faults_injected == 5
+    terminal = {"completed", "timed_out", "preempted", "rejected", "failed"}
+    assert all(m.outcome in terminal for m in rep.metrics)
+    assert rep.pages_leaked == 0
+    assert rep.fault_recoveries == rep.faults_injected
+    s = rep.summary()
+    assert s["recovery_steps_max"] >= 0 and s["pages_leaked"] == 0
+
+
+# ----------------------------------------------------------- chaos parity
+def test_chaos_parity_on_real_model():
+    """Acceptance criterion: under the default FaultPlan, every request
+    that completes does so with tokens byte-identical to the fault-free
+    run — preemption resumes and fault retries re-derive the exact
+    greedy continuation through re-prefill."""
+    span, ps = 24, 4
+    cfg, _, _, model, params = _tiny_serve(span=span, slots=2)
+    eng = PagedEngine(model.prefill_chunk, model.decode_step_paged,
+                      params, model.paged_cache_init, slots=2,
+                      cache_span=span, page_size=ps, num_pages=13,
+                      clock=SimClock())
+    rng = np.random.default_rng(7)
+    def mk():
+        return [Request(rid=i,
+                        prompt=rng.integers(1, cfg.vocab_size,
+                                            size=6 + 2 * (i % 3)
+                                            ).astype(np.int32),
+                        max_new_tokens=5 + (i % 2), arrival_s=0.5 * i,
+                        priority=(2 if i == 3 else 0))
+                for i in range(5)]
+    rng = np.random.default_rng(7)
+    base = eng.run(mk())
+    rng = np.random.default_rng(7)
+    eng.fault_plan = FaultPlan.default(seed=0)
+    chaos = eng.run(mk())
+    base_tok = {m.rid: m.tokens for m in base.metrics if m.finished}
+    chaos_tok = {m.rid: m.tokens for m in chaos.metrics if m.finished}
+    assert chaos_tok, "chaos run completed nothing"
+    for rid, toks in chaos_tok.items():
+        np.testing.assert_array_equal(
+            toks, base_tok[rid],
+            err_msg=f"survivor {rid} diverged under faults")
+    assert chaos.pages_leaked == 0 and base.pages_leaked == 0
+    assert chaos.faults_injected == 5
+
+
+# ----------------------------------------- REPRO_DEBUG_POOL audit (S1)
+def test_debug_pool_audit_raises_at_faulting_call_site(monkeypatch):
+    monkeypatch.setenv("REPRO_DEBUG_POOL", "1")
+    a = PageAllocator(num_pages=6, page_size=4)
+    assert a._audit
+    a.allocate(0, 8)
+    a.allocate(1, 4)
+    a._free.append(a.owned(0)[0])             # corrupt: issued page freed
+    with pytest.raises(PoolInvariantError):
+        a.free(1)                             # raises HERE, not later
+
+
+def test_debug_pool_audit_off_by_default(monkeypatch):
+    monkeypatch.delenv("REPRO_DEBUG_POOL", raising=False)
+    a = PageAllocator(num_pages=6, page_size=4)
+    assert not a._audit
+    a.allocate(0, 8)
+    a.allocate(1, 4)
+    a._free.append(a.owned(0)[0])
+    a.free(1)                                 # silent without the env
+    with pytest.raises(PoolInvariantError):
+        a.check()                             # only the explicit check sees it
+
+
+# -------------------------------------------- CI gate (tools/ci_checks)
+def test_chaos_parity_gate_passes_with_leak_self_test():
+    """The committed chaos-parity CI gate runs end to end on the tiny
+    real model: survivors token-identical, zero leaks, and its built-in
+    self-test (no-op the page-release seam, require the leak detector
+    to trip) — the exit-code contract the workflow step relies on."""
+    import tools.ci_checks as ci_checks
+
+    assert ci_checks.main(["chaos-parity"]) == 0

@@ -155,6 +155,72 @@ print("OK")
 """, n_devices=8)
 
 
+def test_choose_mesh_splits():
+    """`choose_mesh` on awkward device counts: model stays a divisor of
+    n (halved until it divides), non-power-of-two counts fall back to
+    wide data parallelism, and a 1-device fleet is always (1, 1)."""
+    from repro.runtime.elastic import choose_mesh
+
+    def shape(n, **kw):
+        cfg = choose_mesh(n, **kw)
+        assert cfg.axes == ("data", "model")
+        d, m = cfg.shape
+        assert d * m == n, f"{cfg.shape} does not cover {n} devices"
+        return cfg.shape
+
+    assert shape(1) == (1, 1)
+    assert shape(8) == (4, 2)
+    assert shape(16) == (4, 4)
+    # non-power-of-two: model halves until it divides the count
+    assert shape(6) == (3, 2)
+    assert shape(12) == (6, 2)
+    # prime count: model collapses to 1, pure data parallelism
+    assert shape(7) == (7, 1)
+    # prefer_model larger than the fleet clamps down to a divisor
+    assert shape(4, prefer_model=16) == (1, 4)
+    # a non-power-of-two preference is honored when it divides ...
+    assert shape(6, prefer_model=3) == (2, 3)
+    # ... and collapses via integer halving when it does not
+    assert shape(8, prefer_model=3) == (8, 1)
+
+
+def test_elastic_remesh_round_trip():
+    """8 -> 4 -> 8 device round trip: each hop restores the full logical
+    array bit-identically and lays it out across the hop's device count
+    (shrink on node loss, re-expand when capacity returns)."""
+    run_with_devices("""
+import jax, jax.numpy as jnp, numpy as np, tempfile
+from repro.checkpoint import checkpoint as ckpt
+from repro.runtime.elastic import choose_mesh, remesh
+from repro.launch.mesh import make_mesh
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+want = np.arange(64.0).reshape(8, 8)
+pspecs = {"w": P("data", "model")}
+d8 = tempfile.mkdtemp()
+m8 = make_mesh(choose_mesh(8, prefer_model=2))
+tree = {"w": jax.device_put(jnp.asarray(want),
+                            NamedSharding(m8, P("data", "model")))}
+ckpt.save(d8, 5, tree)
+
+# shrink: restore the 8-device checkpoint onto 4 devices
+mesh4, out4 = remesh(d8, tree, choose_mesh(4, prefer_model=2), pspecs)
+assert out4["step"] == 5
+np.testing.assert_array_equal(np.asarray(out4["tree"]["w"]), want)
+assert len(out4["tree"]["w"].addressable_shards) == 4
+
+# re-expand: checkpoint the resharded tree and restore back onto 8
+d4 = tempfile.mkdtemp()
+ckpt.save(d4, 6, out4["tree"])
+mesh8, out8 = remesh(d4, out4["tree"], choose_mesh(8, prefer_model=2),
+                     pspecs)
+assert out8["step"] == 6
+np.testing.assert_array_equal(np.asarray(out8["tree"]["w"]), want)
+assert len(out8["tree"]["w"].addressable_shards) == 8
+print("OK")
+""", n_devices=8)
+
+
 # ------------------------------------------------------------------- data
 def test_data_determinism_and_sharding():
     cfg = reduced(ARCHS["granite-3-8b"])

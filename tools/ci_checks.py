@@ -10,6 +10,7 @@ workflow file:
     PYTHONPATH=src python tools/ci_checks.py scaling-efficiency
     PYTHONPATH=src python tools/ci_checks.py paged-parity
     PYTHONPATH=src python tools/ci_checks.py prefix-parity
+    PYTHONPATH=src python tools/ci_checks.py chaos-parity
     PYTHONPATH=src python tools/ci_checks.py inject-slowdown --factor 2
     PYTHONPATH=src python tools/ci_checks.py regression-gate
 
@@ -23,7 +24,11 @@ equal KV memory budget and asserts greedy token parity plus
 strictly-more concurrent admissions on the paged side; ``prefix-parity``
 does the same for the prefix-sharing radix cache (cache on vs off at
 equal page budget: token parity on a shared-prompt burst and a
-multi-turn replay, strictly-more admissions, warm TTFT < cold TTFT).
+multi-turn replay, strictly-more admissions, warm TTFT < cold TTFT);
+``chaos-parity`` runs a deadline/priority burst under the default
+seeded fault plan and asserts every survivor is token-identical to the
+fault-free run with zero leaked pages, then self-tests its own leak
+detector by no-op'ing the engine's page-release seam.
 
 Every check takes ``--jsonl`` (default ``results/bench/latest.jsonl``)
 and exits 0/1; assertion messages name the offending record.
@@ -298,6 +303,103 @@ def check_prefix_parity(args: argparse.Namespace) -> int:
     return 0
 
 
+def check_chaos_parity(args: argparse.Namespace) -> int:
+    """The fault-injection correctness gate, standalone on a tiny model:
+
+    * a deadline/priority burst through the paged engine under the
+      default seeded :class:`FaultPlan` must inject every scheduled
+      fault, recover all of them, and leak zero pages;
+    * every request that still completes under chaos is token-identical
+      to the fault-free run (faults perturb scheduling and timing, never
+      numerics — the chaos-parity contract);
+    * self-test: with ``PagedEngine._release_pages`` no-op'd the leak
+      detector MUST report leaked pages — proving the gate can actually
+      trip, not just that this workload happens to be clean.
+    """
+    import numpy as np
+
+    from repro.launch.serve import build_engine
+    from repro.serving import FaultPlan, PagedEngine, Request, SimClock
+
+    reduce_kw = dict(layers=2, d_model=64, vocab=128, d_ff=128)
+
+    def make(num_pages):
+        return build_engine(
+            "granite-3-8b",
+            batch=2,
+            prompt_len=18,
+            max_new_tokens=6,
+            scheduler="paged",
+            page_size=4,
+            num_pages=num_pages,
+            prefill_chunk_tokens=4,
+            reduce_kw=reduce_kw,
+            clock=SimClock(),
+        )
+
+    def workload(cfg, mixed_priority=True):
+        rng = np.random.default_rng(11)
+        return [
+            Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab_size, 6 + 2 * (i % 3)
+                                        ).astype(np.int32),
+                    max_new_tokens=5 + (i % 2), arrival_s=0.5 * i,
+                    deadline_s=500.0,
+                    priority=2 if mixed_priority and i == 3 else 0)
+            for i in range(5)
+        ]
+
+    eng, cfg = make(13)
+    base = eng.run(workload(cfg))
+    assert base.completed == len(base.metrics), (
+        f"fault-free run incomplete: {base.completed}/{len(base.metrics)}"
+    )
+    want = {m.rid: [int(t) for t in m.tokens] for m in base.metrics}
+
+    eng.fault_plan = FaultPlan.default(args.seed)
+    chaos = eng.run(workload(cfg))
+    s = chaos.summary()
+    assert s["faults_injected"] > 0, "fault plan injected nothing"
+    assert s["fault_recoveries"] == s["faults_injected"], (
+        f"unrecovered faults: {s['fault_recoveries']}/{s['faults_injected']}"
+    )
+    survivors = [m for m in chaos.metrics if m.outcome == "completed"]
+    assert survivors, "no request survived the default fault plan"
+    for m in survivors:
+        got = [int(t) for t in m.tokens]
+        assert got == want[m.rid], (
+            f"request {m.rid}: tokens under chaos {got} != fault-free "
+            f"{want[m.rid]}"
+        )
+    assert s["pages_leaked"] == 0, (
+        f"{s['pages_leaked']} pages leaked after the chaos run"
+    )
+
+    # self-test: break the one page-release seam; uniform priorities and
+    # no fault plan so nothing requeues (a requeue would re-allocate a
+    # never-freed rid and crash instead of leaking), and a pool sized so
+    # the leaky run still completes — the leak metric is REQUIRED to trip
+    leaky_eng, cfg2 = make(64)
+    orig = PagedEngine._release_pages
+    PagedEngine._release_pages = lambda self, alloc, rid: None
+    try:
+        leaky = leaky_eng.run(workload(cfg2, mixed_priority=False))
+        leaked = leaky.pages_leaked
+    finally:
+        PagedEngine._release_pages = orig
+    assert leaked > 0, (
+        "self-test: page release no-op'd but the leak detector reported "
+        "0 leaked pages — the gate cannot trip"
+    )
+    print(
+        f"chaos-parity: {s['faults_injected']} faults injected+recovered, "
+        f"{len(survivors)}/{len(want)} survivors token-identical, 0 pages "
+        f"leaked; self-test leaked {leaked} pages when release was "
+        f"disabled OK"
+    )
+    return 0
+
+
 def _inject(jsonl: str, factor: float) -> int:
     from repro.bench import write_jsonl
 
@@ -410,6 +512,13 @@ def main(argv: list[str] | None = None) -> int:
     p.add_argument("--page-size", type=int, default=8)
     p.add_argument("--num-pages", type=int, default=16)
     p.set_defaults(fn=check_prefix_parity)
+
+    p = sub.add_parser(
+        "chaos-parity",
+        help="fault injection: survivors token-identical + zero page leaks",
+    )
+    p.add_argument("--seed", type=int, default=0)
+    p.set_defaults(fn=check_chaos_parity)
 
     p = sub.add_parser(
         "inject-slowdown",
