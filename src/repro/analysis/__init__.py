@@ -1,0 +1,19 @@
+"""Static-analysis subsystem: kernel tile contracts, jitted hot-path
+purity, and repo-seam discipline.
+
+Three layers, one CLI (``python -m repro.analysis``; also reachable as
+``tools/ci_checks.py static-analysis``):
+
+* :mod:`repro.analysis.kernel_lint` — Pallas tile-config legality
+  against the backend capability table (RK rules);
+* :mod:`repro.analysis.graph_audit` — traced step-graph purity:
+  callbacks, f64 leaks, recompiles, collectives (RG rules);
+* :mod:`repro.analysis.seams` — AST lint for the serving-seam
+  conventions (RS rules).
+
+Rule catalog lives in :data:`repro.analysis.findings.RULES` and is
+documented in ``benchmarks/README.md``. Suppress a finding with an
+inline ``# repro: allow=<RULE>`` pragma.
+"""
+
+from .findings import RULES, Finding  # noqa: F401

@@ -1,0 +1,121 @@
+"""Finding records shared by every static-analysis layer.
+
+A :class:`Finding` is one machine-readable violation: rule id, rule
+name, ``file:line`` location, and a message naming the offender. The CLI
+(:mod:`repro.analysis.__main__`) prints findings either human-readable
+or as JSON lines (one object per finding), and exits non-zero when any
+survive — the same contract as every other gate in ``tools/ci_checks.py``.
+
+Suppression is per-line and explicit: a ``# repro: allow=<RULE>`` pragma
+on the offending line (or the line directly above it) silences that rule
+there, and ``# repro: allow=*`` silences every rule. Pragmas are for the
+rare intentional exception; the catalog in ``benchmarks/README.md``
+documents each rule and when suppressing it is legitimate.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import asdict, dataclass
+from pathlib import Path
+from typing import Iterable, List, Optional, Sequence
+
+REPO = Path(__file__).resolve().parents[3]
+
+# rule id -> one-line description; every layer registers its rules here
+# so the CLI's --list-rules and the README catalog stay in one place
+RULES = {
+    # kernel contract checker (repro.analysis.kernel_lint)
+    "RK001": "kernel block shape must tile the operand dims exactly",
+    "RK002": "kernel blocks + scratch must fit the backend VMEM budget",
+    "RK003": "tile dims must align to the backend's minimum tile",
+    "RK004": "index_map must stay in bounds over the full grid",
+    "RK005": "kernel operand dtype must be supported by the backend",
+    # jitted hot-path auditor (repro.analysis.graph_audit)
+    "RG001": "no host callbacks inside a jitted hot-path function",
+    "RG002": "no f64/c128 values inside a jitted hot-path function",
+    "RG003": "steady-state engine steps must not recompile",
+    "RG004": "single-device step graphs must not emit collectives",
+    "RG005": "step graphs must not host-transfer (infeed/outfeed)",
+    # repo-seam AST lint (repro.analysis.seams)
+    "RS101": "runtime invariants must raise, not bare-assert",
+    "RS102": "page frees only through PagedEngine._release_pages",
+    "RS103": "engine admission must route through admission_error",
+    "RS104": "no wall-clock time.* calls in Sim-clock code paths",
+    "RS105": "no numpy host ops inside jitted step functions",
+}
+
+_PRAGMA_RE = re.compile(r"#\s*repro:\s*allow=([A-Z*][A-Z0-9*]*)")
+
+
+@dataclass
+class Finding:
+    """One violation: where it is, which rule, and what it says."""
+
+    rule: str  # e.g. "RS101"
+    path: str  # repo-relative (or synthetic) source
+    line: int  # 1-indexed; 0 = whole-target finding
+    message: str
+
+    @property
+    def name(self) -> str:
+        return RULES.get(self.rule, "unknown-rule")
+
+    def to_json(self) -> str:
+        d = asdict(self)
+        d["name"] = self.name
+        return json.dumps(d, sort_keys=True)
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+def relpath(path: Path) -> str:
+    """Repo-relative display path (absolute when outside the repo)."""
+    try:
+        return str(Path(path).resolve().relative_to(REPO))
+    except ValueError:
+        return str(path)
+
+
+def suppressed(source_lines: Sequence[str], line: int, rule: str) -> bool:
+    """Whether ``rule`` is pragma-silenced at 1-indexed ``line`` (pragma
+    on the line itself or the one above)."""
+    for ln in (line, line - 1):
+        if 1 <= ln <= len(source_lines):
+            for m in _PRAGMA_RE.finditer(source_lines[ln - 1]):
+                if m.group(1) in (rule, "*"):
+                    return True
+    return False
+
+
+def apply_pragmas(
+    findings: Iterable[Finding], source_lines: Sequence[str]
+) -> List[Finding]:
+    """Drop findings whose location carries an allow pragma."""
+    return [f for f in findings if not suppressed(source_lines, f.line, f.rule)]
+
+
+def render(findings: Sequence[Finding], *, as_json: bool = False, out=None) -> None:
+    """Print findings (JSONL or human) to ``out`` (default stdout)."""
+    import sys
+
+    out = out or sys.stdout
+    for f in findings:
+        print(f.to_json() if as_json else str(f), file=out)
+
+
+def summarize(findings: Sequence[Finding]) -> str:
+    by_rule: dict = {}
+    for f in findings:
+        by_rule[f.rule] = by_rule.get(f.rule, 0) + 1
+    parts = " ".join(f"{r}={n}" for r, n in sorted(by_rule.items()))
+    return f"{len(findings)} finding(s) [{parts}]" if findings else "clean"
+
+
+def load_source(path: Path) -> Optional[str]:
+    try:
+        return Path(path).read_text()
+    except (OSError, UnicodeDecodeError):
+        return None

@@ -126,7 +126,10 @@ class SyntheticLM:
 
     def batch_at(self, step: int, shard: int = 0, num_shards: int = 1) -> dict:
         """Deterministic batch for `step`; only rows of `shard` are built."""
-        assert self.batch % num_shards == 0
+        if self.batch % num_shards:
+            raise ValueError(
+                f"batch={self.batch} must divide evenly over "
+                f"num_shards={num_shards}")
         rows_per = self.batch // num_shards
         out = np.empty((rows_per, self.seq + 1), np.int32)
         for r in range(rows_per):

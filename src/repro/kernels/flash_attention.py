@@ -122,7 +122,10 @@ def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
     g = Hq // Hkv
     bq = min(block_q, Sq)
     bk = min(block_k, Sk)
-    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    if Sq % bq or Sk % bk:
+        raise ValueError(
+            f"attention blocks must tile the sequence: Sq={Sq} bq={bq} "
+            f"Sk={Sk} bk={bk}")
     nq, nk = Sq // bq, Sk // bk
     scale = 1.0 / np.sqrt(D)
     qt = q.transpose(0, 2, 1, 3)      # (B, Hq, Sq, D)

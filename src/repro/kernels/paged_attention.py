@@ -97,7 +97,10 @@ def paged_attention_fwd(q, k_pages, v_pages, block_tables, lengths, *,
     padded with the null page 0); lengths: (B,) int32 valid KV tokens.
     Returns (B, 1, Hq, D). pages_per_block None = auto (tuned cache)."""
     B, one, Hq, D = q.shape
-    assert one == 1, "paged decode attention takes one query token per row"
+    if one != 1:
+        raise ValueError(
+            f"paged decode attention takes one query token per row, got "
+            f"q.shape={q.shape}")
     P, ps, Hkv, _ = k_pages.shape
     npag = block_tables.shape[1]
     g = Hq // Hkv

@@ -119,7 +119,8 @@ def wkv6_fwd(q, k, v, ld, u=None, *, chunk: int | None = None,
     chunk = tuning.resolve_wkv_chunk(chunk, q_shape=q.shape, v_head=V,
                                      dtype=q.dtype, use_u=u is not None)
     c = min(chunk, T)
-    assert T % c == 0, (T, c)
+    if T % c:
+        raise ValueError(f"wkv6 chunk must tile the sequence: T={T} c={c}")
     n = T // c
     use_u = u is not None
     if u is None:

@@ -25,8 +25,9 @@ from __future__ import annotations
 
 import json
 import os
+from dataclasses import dataclass, field
 from pathlib import Path
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Mapping, Optional, Tuple
 
 import numpy as np
 
@@ -48,6 +49,96 @@ DEFAULTS: Dict[str, Dict[str, int]] = {
 _ENV_MATCH_KEYS = ("backend", "jax", "machine")
 
 _CACHE: Dict[str, Dict[str, Any]] = {}   # backend -> parsed entries
+
+
+# ----------------------------------------------------------- capabilities
+@dataclass(frozen=True)
+class BackendCaps:
+    """Per-backend hardware capability contract the kernel layer tiles
+    against — the multi-backend seam (ROADMAP item 4): new targets slot
+    in as entries here, and both the tile resolvers and the static
+    kernel contract checker (:mod:`repro.analysis.kernel_lint`) read
+    their legality limits from this table instead of hard-coding TPU
+    constants.
+
+    ``min_tile`` maps an operand dtype to the minimum legal
+    (sublane, lane) tile of that backend's vector memory layout; block
+    dimensions smaller than the minimum are padded (wasting VMEM, which
+    the footprint model charges), while larger dimensions must be whole
+    multiples to be MXU-friendly.
+    """
+
+    name: str
+    mxu: Tuple[int, int] = (128, 128)            # systolic matmul tile
+    vpu: Tuple[int, int] = (8, 128)              # vector unit shape
+    vmem_bytes: int = 16 * 1024 * 1024           # per-core fast memory
+    # minimum legal (sublane, lane) tile per operand dtype
+    min_tile: Mapping[str, Tuple[int, int]] = field(
+        default_factory=lambda: {
+            "float32": (8, 128),
+            "bfloat16": (16, 128),
+            "float16": (16, 128),
+            "int8": (32, 128),
+            "uint8": (32, 128),
+            "int32": (8, 128),
+        })
+    # double-buffered operand pipelining: in/out blocks are resident
+    # twice while the grid streams (the footprint model's multiplier)
+    pipeline_buffers: int = 2
+
+    @property
+    def lane(self) -> int:
+        return self.mxu[1]
+
+    def supports(self, dtype: Any) -> bool:
+        return _dtype_name(dtype) in self.min_tile
+
+    def sublane(self, dtype: Any) -> int:
+        """Minimum second-minor block extent for ``dtype`` (f32 fallback
+        for dtypes outside the table, so footprint stays computable)."""
+        return self.min_tile.get(_dtype_name(dtype),
+                                 self.min_tile["float32"])[0]
+
+    def padded_bytes(self, shape: Tuple[int, ...], dtype: Any) -> int:
+        """VMEM bytes one block/scratch buffer of ``shape`` occupies once
+        tiled: the last dim pads to the lane width, the second-minor to
+        the dtype's sublane minimum (1-D buffers pad to one sublane)."""
+        if not shape:
+            return int(np.dtype(dtype).itemsize)
+        dims = list(int(d) for d in shape)
+        dims[-1] = -(-dims[-1] // self.lane) * self.lane
+        sub = self.sublane(dtype)
+        if len(dims) >= 2:
+            dims[-2] = -(-dims[-2] // sub) * sub
+        n = 1
+        for d in dims:
+            n *= d
+        return n * int(np.dtype(dtype).itemsize)
+
+
+BACKEND_CAPS: Dict[str, BackendCaps] = {
+    # real TPU cores and interpret mode (cpu) share one contract: the
+    # Pallas kernels are written against TPU tiling either way, and a
+    # tile that is illegal on hardware should fail the lint even when
+    # the test host happens to interpret it
+    "tpu": BackendCaps(name="tpu"),
+    "cpu": BackendCaps(name="cpu"),
+    # placeholder Mosaic-GPU entry: tensor-core MMA tile with a shared
+    # memory budget standing in for VMEM until GPU kernel variants land
+    "gpu": BackendCaps(name="gpu", mxu=(64, 64), vpu=(1, 32),
+                       vmem_bytes=228 * 1024,
+                       min_tile={"float32": (8, 32), "bfloat16": (8, 32),
+                                 "float16": (8, 32), "int8": (16, 32),
+                                 "int32": (8, 32)}),
+}
+
+
+def capabilities(backend: Optional[str] = None) -> BackendCaps:
+    """Capability entry for ``backend`` (default: the executing jax
+    backend). Unknown backends get the TPU contract — the conservative
+    choice, since every kernel here is authored against TPU tiling."""
+    be = backend or backend_name()
+    return BACKEND_CAPS.get(be, BACKEND_CAPS["tpu"])
 
 
 # ------------------------------------------------------------ environment
@@ -210,12 +301,35 @@ def resolve_wkv_chunk(chunk: Optional[int], *, q_shape, v_head: int, dtype,
     return resolve("wkv6_fwd", sig)["chunk"]
 
 
+def clamp_rmsnorm_rows(block_rows: int, *, d: int, dtype,
+                       backend: Optional[str] = None) -> int:
+    """Shrink ``block_rows`` (halving) until the fused footprint — in and
+    out blocks double-buffered plus the f32 working copy — fits the
+    backend's VMEM budget. The historical 256-row default overflows at
+    d=4096/f32 (~21 MB vs 16 MB); the auto path clamps so wide models
+    get the largest block that actually fits, the same way the paged
+    resolver clamps pages_per_block to the block table."""
+    caps = capabilities(backend)
+    br = max(int(block_rows), 1)
+
+    def fits(r: int) -> bool:
+        blocks = 2 * caps.pipeline_buffers * caps.padded_bytes((r, d), dtype)
+        work = caps.padded_bytes((r, d), "float32")
+        return blocks + work <= caps.vmem_bytes
+
+    floor = caps.sublane(dtype)
+    while br > floor and not fits(br):
+        br //= 2
+    return max(br, 1)
+
+
 def resolve_rmsnorm_rows(block_rows: Optional[int], *, rows: int, d: int,
                          dtype) -> int:
     if block_rows is not None:
-        return int(block_rows)
+        return int(block_rows)   # explicit caller value always wins
     sig = rmsnorm_signature(rows, d, dtype)
-    return resolve("rmsnorm_fwd", sig)["block_rows"]
+    return clamp_rmsnorm_rows(resolve("rmsnorm_fwd", sig)["block_rows"],
+                              d=d, dtype=dtype)
 
 
 def resolve_paged_pages_per_block(pages_per_block: Optional[int], *,

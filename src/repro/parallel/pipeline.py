@@ -26,7 +26,10 @@ from repro.parallel.compat import axis_size, shard_map
 
 def stage_layout(num_layers: int, stage_layers: Sequence[int]):
     """Map layer index -> (stage, slot) with per-stage padding to max."""
-    assert sum(stage_layers) == num_layers, (stage_layers, num_layers)
+    if sum(stage_layers) != num_layers:
+        raise ValueError(
+            f"stage_layers {tuple(stage_layers)} must sum to "
+            f"num_layers={num_layers}")
     lmax = max(stage_layers)
     layer_of = []
     for s, n in enumerate(stage_layers):

@@ -85,7 +85,10 @@ def param_pspecs(params_shape, cfg: ModelConfig, rcfg: RunConfig):
         nd = len(leaf.shape)
 
         def spec(*rest):
-            assert len(L) + len(rest) == nd, (names, leaf.shape, rest)
+            if len(L) + len(rest) != nd:
+                raise ValueError(
+                    f"partition spec rank mismatch for {names}: leaf shape "
+                    f"{leaf.shape} vs spec {L + rest}")
             return P(*L, *rest)
 
         # ---- embedding ----

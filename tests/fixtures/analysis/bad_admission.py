@@ -1,0 +1,20 @@
+"""Planted RS103 violations: an engine whose run() skips _validate and
+whose admission_error override drops the base checks."""
+
+
+class _EngineBase:
+    def admission_error(self, r):
+        return None
+
+    def _validate(self, requests):
+        return requests
+
+
+class RogueEngine(_EngineBase):
+    def admission_error(self, r):
+        # override forgets super().admission_error(r): base checks lost
+        return None if r else "empty"
+
+    def run(self, requests):
+        # never calls self._validate(requests): admission is bypassed
+        return [self.admission_error(r) for r in requests]

@@ -1,0 +1,6 @@
+"""Planted RS101 violation: a bare assert guarding a runtime invariant."""
+
+
+def reserve(slots: int, want: int) -> int:
+    assert want <= slots, "pool overcommitted"  # dies under python -O
+    return slots - want

@@ -1,0 +1,6 @@
+"""Planted RS102 violation: a direct page free outside _release_pages."""
+
+
+class Reaper:
+    def reap(self, alloc, rid: int) -> None:
+        alloc.free(rid)  # bypasses the PagedEngine._release_pages seam

@@ -1,0 +1,13 @@
+"""Planted RS105 violation: a numpy host op inside a jitted function."""
+
+import numpy as np
+
+import jax
+
+
+def pool_step(state):
+    live = np.asarray(state["active"])  # host round-trip inside jit
+    return state, live.sum()
+
+
+pool_step_jit = jax.jit(pool_step)

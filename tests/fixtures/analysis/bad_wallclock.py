@@ -1,0 +1,15 @@
+"""Planted RS104 violation: wall-clock reads in a Sim-clock code path.
+
+The ``repro.serving`` import marks this module as serving-scoped, which
+is what puts it under the Sim-clock discipline.
+"""
+
+import time
+
+from repro.serving.request import SimClock  # noqa: F401
+
+
+def step_duration(engine) -> float:
+    t0 = time.perf_counter()  # wall clock in a SimClock-driven loop
+    engine.step()
+    return time.time() - t0  # and again

@@ -148,3 +148,36 @@ def test_regression_gate_fails_when_it_cannot_trip(tmp_path):
          "--baseline-dir", str(tmp_path / "baselines"),
          "--trajectory", str(tmp_path / "trajectory.jsonl")])
     assert code == 1
+
+
+def test_static_analysis_gate_passes(capsys):
+    assert ci_checks.main(["static-analysis", "--skip-graphs"]) == 0
+    out = capsys.readouterr().out
+    assert "repo clean" in out and "rejected 4 illegal" in out
+
+
+def test_static_analysis_trips_on_dirty_tree(monkeypatch, capsys):
+    from repro.analysis import seams
+    from repro.analysis.findings import Finding
+
+    real = seams.scan_tree
+
+    def fake(root=None):
+        if root is None:
+            return [Finding("RS101", "planted.py", 1, "planted violation")]
+        return real(root)
+
+    monkeypatch.setattr(seams, "scan_tree", fake)
+    assert ci_checks.main(["static-analysis", "--skip-graphs"]) == 1
+    assert "planted.py" in capsys.readouterr().err
+
+
+def test_static_analysis_fails_when_fixtures_cannot_trip(monkeypatch,
+                                                         capsys):
+    """Neutering the seam lint must fail the gate's self-test — the same
+    contract as chaos-parity: a gate that cannot trip is broken."""
+    from repro.analysis import seams
+
+    monkeypatch.setattr(seams, "scan_tree", lambda root=None: [])
+    assert ci_checks.main(["static-analysis", "--skip-graphs"]) == 1
+    assert "cannot fire" in capsys.readouterr().err

@@ -400,6 +400,80 @@ def check_chaos_parity(args: argparse.Namespace) -> int:
     return 0
 
 
+def check_static_analysis(args: argparse.Namespace) -> int:
+    """The static-analysis gate, self-testing like chaos-parity:
+
+    * the repo itself must be clean under every ``repro.analysis`` layer
+      (seam AST lint, kernel tile contracts, traced hot-path audit);
+    * self-test 1: the planted-violation fixtures under
+      ``tests/fixtures/analysis/`` MUST trip every RS rule — proving the
+      lint can fire, not just that the tree happens to be clean;
+    * self-test 2: one deliberately illegal tile config per kernel MUST
+      be rejected by the contract checker (VMEM overflow on flash/rwkv/
+      rmsnorm/paged), while the shipped DEFAULTS stay accepted.
+    """
+    from repro.analysis import __main__ as analysis_cli
+    from repro.analysis import kernel_lint, seams
+
+    layers = (
+        ("seams", "kernels")
+        if args.skip_graphs
+        else ("seams", "kernels", "graphs")
+    )
+    findings = analysis_cli.run_layers(layers)
+    assert not findings, "repo not clean:\n" + "\n".join(
+        str(f) for f in findings
+    )
+
+    fixtures = REPO / "tests" / "fixtures" / "analysis"
+    tripped = {f.rule for f in seams.scan_tree(fixtures)}
+    expected = {"RS101", "RS102", "RS103", "RS104", "RS105"}
+    missing = expected - tripped
+    assert not missing, (
+        f"self-test: planted fixtures under {fixtures} did not trip "
+        f"{sorted(missing)} — the lint cannot fire"
+    )
+
+    illegal = [
+        (
+            "flash_attention_fwd",
+            dict(B=1, Sq=2048, Sk=2048, Hq=32, Hkv=8, D=128, dtype="float32"),
+            {"block_q": 2048, "block_k": 2048},
+        ),
+        (
+            "wkv6_fwd",
+            dict(B=1, T=2048, H=32, K=64, V=64, dtype="float32"),
+            {"chunk": 1024},
+        ),
+        (
+            "rmsnorm_fwd",
+            dict(rows=65536, d=512, dtype="float32"),
+            {"block_rows": 65536},
+        ),
+        (
+            "paged_attention_fwd",
+            dict(B=8, Hq=32, Hkv=8, D=128, P=512, ps=16, npag=512, dtype="float32"),
+            {"pages_per_block": 512},
+        ),
+    ]
+    for kernel, dims, cfg in illegal:
+        bad = kernel_lint.check_config(kernel, dims, cfg, "tpu")
+        assert bad, (
+            f"self-test: illegal tile config {cfg} for {kernel} was "
+            "accepted — the contract checker cannot trip"
+        )
+    defaults_bad = kernel_lint.check_defaults("tpu")
+    assert not defaults_bad, "shipped DEFAULTS rejected: " + "; ".join(
+        str(f) for f in defaults_bad
+    )
+    print(
+        f"static-analysis: repo clean across {','.join(layers)}; "
+        f"self-test tripped {sorted(tripped & expected)} on fixtures and "
+        f"rejected {len(illegal)} illegal tile configs OK"
+    )
+    return 0
+
+
 def _inject(jsonl: str, factor: float) -> int:
     from repro.bench import write_jsonl
 
@@ -519,6 +593,17 @@ def main(argv: list[str] | None = None) -> int:
     )
     p.add_argument("--seed", type=int, default=0)
     p.set_defaults(fn=check_chaos_parity)
+
+    p = sub.add_parser(
+        "static-analysis",
+        help="repo clean under repro.analysis + planted violations trip",
+    )
+    p.add_argument(
+        "--skip-graphs",
+        action="store_true",
+        help="skip the traced hot-path audit (the slow layer)",
+    )
+    p.set_defaults(fn=check_static_analysis)
 
     p = sub.add_parser(
         "inject-slowdown",
