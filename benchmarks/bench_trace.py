@@ -1,0 +1,235 @@
+"""Tier-2 trace-replay scenarios: capture → DAG replay → prediction.
+
+The measure→compare→gate loop applied to *prediction* (DESIGN.md §3):
+every scenario first CAPTURES a trace of a real run, then REPLAYS its
+event DAG and compares the replayed prediction against the measurement
+it was decomposed from.
+
+* ``trace_replay/matrix`` — one trace per cell of the measured DP/TP
+  scaling-matrix grid (same splits, same reduced model, same
+  subprocess-simulated meshes as ``bench_scaling_matrix``). Each record
+  carries ``predicted_us`` (identity replay of the cell's DAG) next to
+  ``measured_us`` and the ``rel_err`` between them —
+  ``tools/ci_checks.py trace-replay-error`` gates rel_err ≤ 25% per
+  cell. Traces land in ``results/traces/`` (CI artifacts).
+* ``trace_replay/whatif`` — cross-split predictions from the 1x1 trace
+  alone (``trace.whatif.predict_split``): for every other measured
+  cell, the record reports the what-if prediction, the measured time,
+  and their ratio. REPORTED, not gated — simulated-host cells include
+  shared-core contention no per-device model represents (DESIGN.md §4).
+* ``trace_replay/advise`` — the trace-driven ``mesh_advisor`` mode:
+  split rankings at 8 devices from analytic peaks vs from the 1x1
+  trace's measured calibration.
+* ``trace_replay/serve`` — a paged-engine burst under
+  ``TracingClock(SimClock)``: the dispatch-chain trace's identity
+  replay must equal the engine's busy time exactly (deterministic, so
+  ``rel_err`` here is 0 by construction or the seam is broken).
+
+Selection: ``python -m benchmarks.run --only trace_replay``.
+"""
+
+from __future__ import annotations
+
+import functools
+from pathlib import Path
+from typing import Dict, Tuple
+
+from benchmarks.bench_scaling_matrix import ARCH, B, DEVICE_COUNTS, S, SPLITS
+from repro.bench import BenchRecord, Workload, scenario
+from repro.bench.runner import TimingStats
+
+TRACE_DIR = Path(__file__).resolve().parent.parent / "results" / "traces"
+GATE_REL_ERR = 0.25  # the trace-replay-error CI bound, per matrix cell
+
+
+@functools.lru_cache(maxsize=None)
+def _cell_traces(n_devices: int) -> Dict[str, "object"]:
+    """split-name -> captured Trace, one child process per device count
+    (cached so the dp/tp/mixed/whatif scenarios share the children)."""
+    from repro.trace import capture_matrix_cell
+
+    traces = capture_matrix_cell(n_devices, SPLITS[n_devices],
+                                 arch=ARCH, batch=B, seq=S)
+    out = {}
+    for tr in traces:
+        split = tr.mesh
+        out[split] = tr
+        tr.save(TRACE_DIR / f"{ARCH}-{split}.json")
+    return out
+
+
+def _cell_record(kind: str, shape: Tuple[int, int],
+                 n_devices: int) -> BenchRecord:
+    """One matrix cell: identity replay vs the measurement it came from."""
+    from repro.trace import replay
+
+    split = "x".join(map(str, shape))
+    tr = _cell_traces(n_devices)[split]
+    base = _cell_traces(1)["1x1"]
+    res = replay(tr)
+    measured_us = tr.measured_step_s * 1e6
+    predicted_us = res.predicted_s * 1e6
+    rel_err = abs(predicted_us - measured_us) / measured_us
+    tokens = B * S
+    name = (f"trace_replay/{kind}{n_devices}" if kind != "mix"
+            else f"trace_replay/mix_{split}")
+    return BenchRecord(
+        name=name,
+        mesh=split,
+        us_per_call=TimingStats([t * 1e6 for t in tr.samples_s]),
+        knobs={"devices": n_devices, "split": split, "kind": kind},
+        derived={
+            "measured_us": round(measured_us, 1),
+            "predicted_us": round(predicted_us, 1),
+            "rel_err": round(rel_err, 6),
+            "gate_rel_err": GATE_REL_ERR,
+            "efficiency": round(
+                (tokens / tr.measured_step_s)
+                / (tokens / base.measured_step_s), 4),
+            "dominant": res.dominant_lane,
+            "n_events": len(tr.events),
+            "critical_path_len": len(res.critical_path),
+            "calibration_ratio": round(
+                float(tr.meta.get("calibration_ratio", 0.0)), 4),
+        },
+    )
+
+
+@scenario(
+    "trace_replay/matrix",
+    tags=("tier2", "measured", "trace_replay"),
+    paper_ref="Sec. V guidance loop (trace capture -> replay prediction)",
+    workloads=[
+        Workload(label=f"n{n}", arch=ARCH, knobs={"devices": n})
+        for n in DEVICE_COUNTS
+    ],
+)
+def trace_replay_matrix(wl: Workload):
+    """Identity replay of every captured scaling-matrix cell at this
+    device count; rel_err per cell is the trace-replay-error gate."""
+    n = wl.knobs["devices"]
+    for dp, tp in SPLITS[n]:
+        kind = "dp" if tp == 1 else ("tp" if dp == 1 else "mix")
+        yield _cell_record(kind, (dp, tp), n)
+
+
+@scenario(
+    "trace_replay/whatif",
+    tags=("tier2", "measured", "trace_replay"),
+    paper_ref="Sec. V guidance loop (what-if split prediction)",
+    workloads=[Workload(label="from-1x1", arch=ARCH, knobs={})],
+)
+def trace_replay_whatif(wl: Workload):
+    """Cross-split what-if predictions from the 1x1 trace vs every
+    measured cell (reported, not gated — DESIGN.md §4)."""
+    from repro.trace import predict_split
+
+    base = _cell_traces(1)["1x1"]
+    for n in DEVICE_COUNTS:
+        cells = _cell_traces(n)
+        for dp, tp in SPLITS[n]:
+            split = f"{dp}x{tp}"
+            pred = predict_split(base, (dp, tp))
+            measured_s = cells[split].measured_step_s
+            predicted_us = pred.predicted_s * 1e6
+            measured_us = measured_s * 1e6
+            yield BenchRecord(
+                name=f"trace_replay/whatif_{split}",
+                mesh=split,
+                us_per_call=measured_us,
+                knobs={"devices": n, "split": split},
+                derived={
+                    "predicted_us": round(predicted_us, 1),
+                    "measured_us": round(measured_us, 1),
+                    "ratio": round(predicted_us / measured_us, 4),
+                    "rel_err": round(
+                        abs(predicted_us - measured_us) / measured_us, 4),
+                    "dominant": pred.dominant_lane,
+                    "gated": False,
+                },
+            )
+
+
+@scenario(
+    "trace_replay/advise",
+    tags=("tier2", "trace_replay"),
+    paper_ref="Sec. V guidance loop (trace-calibrated mesh advisor)",
+    workloads=[Workload(label="n8", arch=ARCH, knobs={"devices": 8})],
+)
+def trace_replay_advise(wl: Workload):
+    """Split ranking at 8 devices: analytic peaks vs the 1x1 trace's
+    measured calibration through the same advisor."""
+    from repro.configs import ARCHS, ShapeConfig, reduced
+    from repro.core.mesh_advisor import advise
+    from repro.trace import advise_from_trace
+    from repro.trace.capture import MATRIX_REDUCE_KW
+
+    n = wl.knobs["devices"]
+    base = _cell_traces(1)["1x1"]
+    cfg = reduced(ARCHS[ARCH], **MATRIX_REDUCE_KW)
+    shape = ShapeConfig("trace", "train", S, B)
+    candidates = [1, 2, 4, 8]
+    analytic = advise(cfg, shape, n, candidates=candidates)
+    traced = advise_from_trace(base, n, candidates=candidates)
+    cal = base.calibration()
+    yield BenchRecord(
+        name=f"trace_replay/advise{n}",
+        mesh="x".join(map(str, traced[0].mesh.shape)),
+        knobs={"devices": n},
+        derived={
+            "analytic_best": "x".join(map(str, analytic[0].mesh.shape)),
+            "traced_best": "x".join(map(str, traced[0].mesh.shape)),
+            "analytic_step_us": round(analytic[0].step_s * 1e6, 1),
+            "traced_step_us": round(traced[0].step_s * 1e6, 1),
+            "traced_dominant": traced[0].dominant,
+            "flops_per_s": round(cal["flops_per_s"], 1),
+            "hbm_bytes_per_s": round(cal["hbm_bytes_per_s"], 1),
+            "ici_bytes_per_s": round(cal["ici_bytes_per_s"], 1),
+            "calibration_ratio": round(cal["calibration_ratio"], 4),
+        },
+    )
+
+
+@scenario(
+    "trace_replay/serve",
+    tags=("tier2", "serving", "trace_replay"),
+    paper_ref="Sec. V guidance loop (serving dispatch trace)",
+    workloads=[Workload(label="paged-burst", arch=ARCH, knobs={})],
+)
+def trace_replay_serve(wl: Workload):
+    """Paged-engine burst under TracingClock(SimClock): the recorded
+    dispatch chain replays to exactly the engine's busy time."""
+    from repro.data.pipeline import synth_requests
+    from repro.launch.serve import build_engine
+    from repro.serving.request import SimClock
+    from repro.trace import TracingClock, replay
+
+    clk = TracingClock(SimClock(prefill_cost_s=0.5, decode_cost_s=0.1))
+    eng, cfg = build_engine(
+        ARCH, batch=4, prompt_len=8, max_new_tokens=8, scheduler="paged",
+        page_size=4, num_pages=64, clock=clk,
+        reduce_kw=dict(layers=2, d_model=64, vocab=128, d_ff=128))
+    reqs = synth_requests(cfg, 6, 8, max_new_tokens=(8,), seed=0)
+    report = eng.run(reqs)
+    tr = clk.trace(f"serve/{ARCH}/paged", arch=ARCH)
+    tr.save(TRACE_DIR / f"{ARCH}-serve-paged.json")
+    res = replay(tr)
+    busy_us = tr.measured_step_s * 1e6
+    predicted_us = res.predicted_s * 1e6
+    yield BenchRecord(
+        name="trace_replay/serve_paged",
+        us_per_call=TimingStats(
+            [ev.cost_s * 1e6 for ev in tr.events if ev.cost_s > 0]
+        ),
+        knobs={"scheduler": "paged", "requests": len(reqs)},
+        derived={
+            "completed": report.completed,
+            "busy_us": round(busy_us, 1),
+            "predicted_us": round(predicted_us, 1),
+            "rel_err": round(
+                abs(predicted_us - busy_us) / busy_us, 6) if busy_us else 0.0,
+            "n_events": len(tr.events),
+            "prefill_dispatches": tr.meta["dispatches"].get("prefill", 0),
+            "decode_dispatches": tr.meta["dispatches"].get("decode", 0),
+        },
+    )

@@ -32,6 +32,7 @@ running scenarios and compares the existing ``--json`` file as-is.
 | bench_roofline         | roofline          | Fig. 10 (roofline models) |
 | bench_scalability      | scalability       | Table III / Fig. 11       |
 | bench_scaling_matrix   | scaling_matrix    | Fig. 11 (measured matrix) |
+| bench_trace            | trace_replay      | Sec. V (trace -> predict) |
 | bench_batch_precision  | deploy            | Fig. 12 / Table IV        |
 | bench_kernels          | kernels           | kernel microbenchmarks    |
 | bench_serving          | serving           | Tier-2 serving latency    |
@@ -67,6 +68,7 @@ MODULES = {
     "bench_roofline": ("roofline",),
     "bench_scalability": ("scalability",),
     "bench_scaling_matrix": ("scaling_matrix",),
+    "bench_trace": ("trace_replay",),
     "bench_batch_precision": ("deploy",),
     "bench_kernels": ("kernels",),
     "bench_serving": ("serving",),

@@ -133,6 +133,14 @@ class CostReport:
             out[c.opcode] += c.bytes * c.count
         return dict(out)
 
+    def collective_ici_summary(self) -> Dict[str, float]:
+        """Per-opcode ring link traffic (ici_bytes x count) — the
+        collective-lane breakdown trace capture decomposes against."""
+        out: Dict[str, float] = defaultdict(float)
+        for c in self.collectives:
+            out[c.opcode] += c.ici_bytes * c.count
+        return dict(out)
+
 
 # ---------------------------------------------------------------- parsing
 _SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\](?:\{[^}]*\})?")

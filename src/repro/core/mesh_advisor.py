@@ -22,7 +22,7 @@ Validated against the measured dry-run rankings in tests/test_advisor.py.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional
+from typing import List, Mapping, Optional
 
 from repro.configs.base import MeshConfig, ModelConfig, ShapeConfig
 from repro.core.roofline import HBM_BW, HBM_PER_CHIP, ICI_BW_PER_LINK, \
@@ -56,8 +56,26 @@ def _opt_bytes_per_param(params: float) -> float:
 
 def advise(cfg: ModelConfig, shape: ShapeConfig, n_devices: int = 256,
            *, candidates: Optional[List[int]] = None,
-           seqs_per_device: int = 1) -> List[MeshAdvice]:
-    """Rank (data, model) splits of `n_devices` for a training shape."""
+           seqs_per_device: int = 1,
+           calibration: Optional[Mapping[str, float]] = None,
+           ) -> List[MeshAdvice]:
+    """Rank (data, model) splits of `n_devices` for a training shape.
+
+    `calibration` switches the advisor from analytic peaks to rates a
+    captured trace actually measured (``Trace.calibration()`` from
+    ``repro.trace`` — duck-typed as a plain mapping so core never
+    imports trace): `flops_per_s` / `hbm_bytes_per_s` /
+    `ici_bytes_per_s` replace the hardware peaks, and
+    `useful_flops_scale` inflates the analytic FLOP count by the
+    measured HLO-vs-analytic ratio (remat and attention overhead the
+    closed-form 6*P*tokens estimate misses). Missing keys keep their
+    analytic defaults, so partial calibrations compose.
+    """
+    cal = dict(calibration or {})
+    flops_rate = float(cal.get("flops_per_s", PEAK_FLOPS_BF16))
+    hbm_rate = float(cal.get("hbm_bytes_per_s", HBM_BW))
+    ici_rate = float(cal.get("ici_bytes_per_s", ICI_BW_PER_LINK))
+    flops_scale = float(cal.get("useful_flops_scale", 1.0))
     P = float(cfg.param_count())
     P_act = float(cfg.active_param_count())
     tokens = shape.global_batch * shape.seq_len
@@ -79,11 +97,12 @@ def advise(cfg: ModelConfig, shape: ShapeConfig, n_devices: int = 256,
         tokens_local = tokens / dp
         fwd_bwd = 3.0 if shape.kind == "train" else 1.0
 
-        compute = fwd_bwd * 2.0 * P_act * tokens / n_devices / PEAK_FLOPS_BF16
+        compute = (fwd_bwd * 2.0 * P_act * tokens * flops_scale
+                   / n_devices / flops_rate)
         # memory: weights read per mb + activations ~10 passes
         w_reads = n_mb * fwd_bwd * (P_act / model) * 2
         act_reads = fwd_bwd * 10 * tokens_local * d * 2
-        memory = (w_reads + act_reads) / HBM_BW
+        memory = (w_reads + act_reads) / hbm_rate
 
         tp_sites = 4 if cfg.moe is None else 2   # psums/layer (fwd+bwd)
         coll = 0.0
@@ -94,7 +113,7 @@ def advise(cfg: ModelConfig, shape: ShapeConfig, n_devices: int = 256,
             # recompute) + one grad reduce-scatter per step
             coll += n_mb * 2.5 * (P / model) * 2 * (dp - 1) / dp
             coll += (P / model) * 4 * (dp - 1) / dp
-        collective = coll / ICI_BW_PER_LINK
+        collective = coll / ici_rate
 
         hbm = (P * _opt_bytes_per_param(P) / n_devices
                + (P / (L * model)) * 2 * 2          # gathered layer weights

@@ -1,0 +1,65 @@
+"""repro.trace — trace-driven op-level profiling and DAG replay.
+
+The measure->compare->gate loop applied to *prediction* (DESIGN.md §3):
+
+* :mod:`repro.trace.schema`  — the serializable trace format: a DAG of
+  timed :class:`TraceEvent` nodes inside a schema-versioned,
+  env-fingerprinted :class:`Trace` (JSON on disk, like ``BenchRecord``);
+* :mod:`repro.trace.capture` — recorders: the real train step (own
+  timers over the jitted boundary + a per-op breakdown lifted from
+  ``core/hlo_analysis`` on the lowered module) and the serving engines'
+  prefill/decode dispatches (via :class:`TracingClock`, recorded at the
+  clock seam — no engine changes);
+* :mod:`repro.trace.replay`  — the critical-path replayer: an
+  earliest-start walk over the DAG predicting step time under edits;
+* :mod:`repro.trace.whatif`  — edits (scale an op, re-split the mesh)
+  and the trace-calibrated ``mesh_advisor`` bridge.
+
+Validated cell-by-cell against the measured DP/TP/PP scaling matrix
+(``benchmarks/bench_trace.py``; ``tools/ci_checks.py trace-replay-error``
+gates <= 25% relative error per cell in CI).
+"""
+
+from repro.trace.capture import (
+    TracingClock,
+    capture_matrix_cell,
+    capture_train_trace,
+    dag_from_cost_summary,
+    trace_from_cell_payload,
+)
+from repro.trace.replay import ReplayResult, replay, toposort
+from repro.trace.schema import (
+    TRACE_SCHEMA_VERSION,
+    Trace,
+    TraceError,
+    TraceEvent,
+    load_trace,
+)
+from repro.trace.whatif import (
+    advise_from_trace,
+    predict_split,
+    scale_kind,
+    scale_op,
+    set_cost,
+)
+
+__all__ = [
+    "TRACE_SCHEMA_VERSION",
+    "Trace",
+    "TraceError",
+    "TraceEvent",
+    "TracingClock",
+    "ReplayResult",
+    "advise_from_trace",
+    "capture_matrix_cell",
+    "capture_train_trace",
+    "dag_from_cost_summary",
+    "load_trace",
+    "predict_split",
+    "replay",
+    "scale_kind",
+    "scale_op",
+    "set_cost",
+    "toposort",
+    "trace_from_cell_payload",
+]

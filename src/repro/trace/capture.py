@@ -1,0 +1,402 @@
+"""Trace capture: decompose a measured step into a replayable DAG.
+
+Two recorders (DESIGN.md §3):
+
+* **Train step** — :func:`capture_train_trace` times the real jitted
+  train step with its own timers (Python timers can only see the jitted
+  boundary, so intra-step structure cannot be timed directly), lowers
+  the same step and runs ``core/hlo_analysis`` on the compiled module,
+  then apportions the measured median across per-op events: each lane
+  (compute / memory / collective) is a chain of the module's heaviest
+  ops, costed at its roofline seconds times one measured/roofline
+  calibration ratio. The lanes run in parallel between a root and a
+  sink — the roofline overlap assumption made explicit as DAG
+  structure — so the identity replay reconstructs the measured step
+  and what-if edits shift real, named ops.
+* **Serving** — :class:`TracingClock` wraps any engine clock
+  (``WallClock`` or ``SimClock``) and records one event per
+  prefill/decode charge at the engines' existing dispatch seam; no
+  engine code changes. The resulting trace is a measured dispatch
+  chain whose identity replay equals the engine's busy time.
+
+:func:`capture_matrix_cell` runs the train-step recorder inside the
+same subprocess-simulated device meshes the scaling matrix uses
+(``XLA_FLAGS=--xla_force_host_platform_device_count=N``), one child per
+device count, each child printing one trace JSON per split.
+"""
+
+from __future__ import annotations
+
+import statistics
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.trace.schema import Trace, TraceEvent
+
+# the reduced model the measured scaling matrix runs (bench_scaling_matrix)
+MATRIX_REDUCE_KW = dict(layers=2, d_model=128, d_ff=256, vocab=512)
+
+
+# --------------------------------------------------------- DAG decomposition
+def _lane_items(
+    by_op: Dict[str, float], rate: float, ops_per_lane: int
+) -> List[Tuple[str, float]]:
+    """Top ops of one lane as (op, roofline_seconds), heaviest first,
+    the tail lumped into one "other" event so lane totals stay exact."""
+    items = sorted(
+        ((op, amt) for op, amt in by_op.items() if amt > 0),
+        key=lambda kv: -kv[1],
+    )
+    head = items[: max(1, ops_per_lane - 1)]
+    tail = sum(amt for _, amt in items[len(head) :])
+    out = [(op, amt / rate) for op, amt in head]
+    if tail > 0:
+        out.append(("other", tail / rate))
+    return out
+
+
+def dag_from_cost_summary(
+    summary: Dict[str, Any],
+    measured_s: float,
+    *,
+    ops_per_lane: int = 6,
+) -> Tuple[List[TraceEvent], Dict[str, float]]:
+    """Build the lane DAG from an HLO cost summary + a measured step.
+
+    ``summary`` carries per-device totals and per-op breakdowns from
+    ``core/hlo_analysis`` (``flops_by_op``, ``bytes_by_op``,
+    ``collective_ici_by_op``). Returns ``(events, extras)`` where
+    ``extras`` holds the calibration ratio (measured over the roofline
+    max-lane time) and the raw per-lane roofline seconds.
+    """
+    from repro.core.roofline import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+    lanes = {
+        "compute": _lane_items(
+            summary.get("flops_by_op", {}), PEAK_FLOPS_BF16, ops_per_lane
+        ),
+        "memory": _lane_items(
+            summary.get("bytes_by_op", {}), HBM_BW, ops_per_lane
+        ),
+        "collective": _lane_items(
+            summary.get("collective_ici_by_op", {}),
+            ICI_BW_PER_LINK,
+            ops_per_lane,
+        ),
+    }
+    roofline_s = {
+        kind: sum(s for _, s in items) for kind, items in lanes.items()
+    }
+    max_lane = max(roofline_s.values(), default=0.0)
+    events: List[TraceEvent] = [
+        TraceEvent("root", "host", "dispatch", 0.0)
+    ]
+    if max_lane <= 0:
+        # nothing to decompose (no HLO summary): one opaque step event
+        events.append(
+            TraceEvent("step", "host", "step", measured_s, deps=("root",))
+        )
+        events.append(TraceEvent("sink", "host", "sync", 0.0, deps=("step",)))
+        return events, {"calibration_ratio": 1.0, **{
+            f"roofline_{k}_s": v for k, v in roofline_s.items()}}
+    ratio = measured_s / max_lane
+    tails: List[str] = []
+    for kind, items in lanes.items():
+        prev = "root"
+        for i, (op, roof_s) in enumerate(items):
+            eid = f"{kind}{i}:{op}"
+            events.append(
+                TraceEvent(
+                    eid,
+                    kind,
+                    op,
+                    roof_s * ratio,
+                    deps=(prev,),
+                    meta={"roofline_s": roof_s},
+                )
+            )
+            prev = eid
+        if prev != "root":
+            tails.append(prev)
+    events.append(TraceEvent("sink", "host", "sync", 0.0, deps=tuple(tails)))
+    extras = {"calibration_ratio": ratio}
+    for kind, v in roofline_s.items():
+        extras[f"roofline_{kind}_s"] = v
+    return events, extras
+
+
+def cost_summary(report) -> Dict[str, Any]:
+    """Wire format of a ``CostReport`` for trace metadata / subprocess
+    transport: totals plus the per-op breakdowns the DAG builder eats."""
+    return {
+        "flops": report.flops,
+        "dot_flops": report.dot_flops,
+        "bytes": report.bytes,
+        "ici_bytes": report.collective_ici_bytes,
+        "flops_by_op": dict(report.flops_by_op),
+        "bytes_by_op": dict(report.bytes_by_op),
+        "collective_ici_by_op": report.collective_ici_summary(),
+    }
+
+
+def trace_from_cell_payload(
+    payload: Dict[str, Any],
+    *,
+    name: str,
+    arch: str = "",
+    shape: str = "",
+    mesh: str = "",
+    n_devices: int = 1,
+    kind: str = "train_step",
+    ops_per_lane: int = 6,
+) -> Trace:
+    """Assemble a :class:`Trace` from one captured cell: measured
+    ``samples_s`` + an HLO ``summary`` + cell ``meta``."""
+    samples = [float(s) for s in payload["samples_s"]]
+    measured = float(statistics.median(samples))
+    events, extras = dag_from_cost_summary(
+        payload.get("summary", {}), measured, ops_per_lane=ops_per_lane
+    )
+    meta = dict(payload.get("meta", {}))
+    summary = payload.get("summary", {})
+    for key in ("flops", "dot_flops", "bytes", "ici_bytes"):
+        if key in summary:
+            meta[key] = summary[key]
+    meta.update(extras)
+    trace = Trace(
+        name=name,
+        kind=kind,
+        arch=arch,
+        shape=shape,
+        mesh=mesh,
+        n_devices=n_devices,
+        measured_step_s=measured,
+        samples_s=samples,
+        events=events,
+        meta=meta,
+    )
+    trace.validate()
+    return trace
+
+
+# ------------------------------------------------------- train-step capture
+def capture_train_trace(
+    arch: str = "granite-3-8b",
+    *,
+    split: Tuple[int, int] = (1, 1),
+    batch: int = 8,
+    seq: int = 64,
+    reduce_kw: Optional[Dict[str, int]] = None,
+    iters: int = 5,
+    warmup: int = 2,
+    ops_per_lane: int = 6,
+) -> Trace:
+    """Capture one train-step trace on the current host devices.
+
+    Mirrors the scaling-matrix cell exactly (same reduced model, same
+    ``RunConfig`` knobs), but compiles ahead-of-time so the SAME
+    compiled module is both timed and fed to ``core/hlo_analysis``.
+    Requires ``jax.device_count() >= dp * tp``.
+    """
+    import jax
+    from jax.sharding import NamedSharding
+
+    from repro.configs import ARCHS, MeshConfig, RunConfig, ShapeConfig
+    from repro.configs import reduced as reduce_cfg
+    from repro.core.hlo_analysis import analyze_hlo
+    from repro.core.profiler import model_flops_for
+    from repro.launch.mesh import make_mesh, set_mesh
+    from repro.models.frontends import synth_batch
+    from repro.parallel import sharding as shd
+    from repro.runtime.steps import build_train_step
+
+    reduce_kw = dict(MATRIX_REDUCE_KW if reduce_kw is None else reduce_kw)
+    cfg = reduce_cfg(ARCHS[arch], **reduce_kw)
+    dp, tp = split
+    n_devices = dp * tp
+    if jax.device_count() < n_devices:
+        raise RuntimeError(
+            f"split {dp}x{tp} needs {n_devices} devices, host has "
+            f"{jax.device_count()} (set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n_devices})"
+        )
+    mesh_cfg = MeshConfig(shape=split, axes=("data", "model"))
+    shape = ShapeConfig("trace", "train", seq, batch)
+    rcfg = RunConfig(
+        model=cfg,
+        shape=shape,
+        mesh=mesh_cfg,
+        param_dtype="float32",
+        attention_backend="dense",
+        exec_mode="resident",
+    )
+    mesh = make_mesh(mesh_cfg)
+    with set_mesh(mesh):
+        step, model, opt = build_train_step(rcfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        pspecs = shd.param_pspecs(params, cfg, rcfg)
+        params = jax.tree.map(
+            lambda x, sp: jax.device_put(x, NamedSharding(mesh, sp)),
+            params,
+            pspecs,
+            is_leaf=lambda x: not isinstance(x, dict),
+        )
+        opt_state = opt.init(params)
+        data = synth_batch(cfg, batch, seq, kind="train")
+        compiled = jax.jit(step).lower(params, opt_state, data).compile()
+        hlo_report = analyze_hlo(compiled.as_text())
+        args = (params, opt_state, data)
+        for _ in range(warmup):
+            jax.block_until_ready(compiled(*args))
+        samples = []
+        for _ in range(iters):
+            # train capture measures the real jitted step; the Sim-clock
+            # discipline only binds the serving path (TracingClock below)
+            t0 = time.perf_counter()  # repro: allow=RS104
+            jax.block_until_ready(compiled(*args))
+            samples.append(time.perf_counter() - t0)  # repro: allow=RS104
+    payload = {
+        "samples_s": samples,
+        "summary": cost_summary(hlo_report),
+        "meta": {
+            "model_flops": model_flops_for(cfg, shape),
+            "param_count": float(cfg.param_count()),
+            "d_model": cfg.d_model,
+            "layers": cfg.num_layers + cfg.encoder_layers,
+            "heads": cfg.num_heads,
+            "tokens": batch * seq,
+            "batch": batch,
+            "seq": seq,
+            "split": [dp, tp],
+            "reduce_kw": reduce_kw,
+        },
+    }
+    return trace_from_cell_payload(
+        payload,
+        name=f"train/{arch}/{dp}x{tp}",
+        arch=arch,
+        shape=shape.name,
+        mesh=f"{dp}x{tp}",
+        n_devices=n_devices,
+        ops_per_lane=ops_per_lane,
+    )
+
+
+_CELL_CODE = r"""
+import json
+from repro.trace.capture import capture_train_trace
+
+for split in {splits!r}:
+    tr = capture_train_trace(
+        arch={arch!r}, split=tuple(split), batch={batch}, seq={seq},
+        reduce_kw={reduce_kw!r}, iters={iters}, warmup={warmup})
+    print(tr.to_json())
+"""
+
+
+def capture_matrix_cell(
+    n_devices: int,
+    splits: Sequence[Tuple[int, int]],
+    *,
+    arch: str = "granite-3-8b",
+    batch: int = 8,
+    seq: int = 64,
+    reduce_kw: Optional[Dict[str, int]] = None,
+    iters: int = 5,
+    warmup: int = 2,
+    timeout: int = 900,
+) -> List[Trace]:
+    """Capture train-step traces for ``splits`` inside one simulated
+    ``n_devices``-host child process (the scaling-matrix transport:
+    ``repro.bench.runner.run_with_devices``)."""
+    from repro.bench.runner import run_with_devices
+
+    code = _CELL_CODE.format(
+        splits=[list(s) for s in splits],
+        arch=arch,
+        batch=batch,
+        seq=seq,
+        reduce_kw=dict(MATRIX_REDUCE_KW if reduce_kw is None else reduce_kw),
+        iters=iters,
+        warmup=warmup,
+    )
+    out: List[Trace] = []
+    for line in run_with_devices(
+        code, n_devices=n_devices, timeout=timeout
+    ).splitlines():
+        line = line.strip()
+        if line.startswith("{"):
+            trace = Trace.from_json(line)
+            trace.validate()
+            out.append(trace)
+    return out
+
+
+# ----------------------------------------------------------- serving capture
+class TracingClock:
+    """Record the serving engines' prefill/decode dispatches as trace
+    events, from the clock seam every engine already charges.
+
+    Wraps any engine clock (``WallClock``, ``SimClock``): ``charge`` is
+    called exactly once per prefill-chunk dispatch and per pool decode
+    step (``serving/engine.py``, ``serving/paged.py``), so the elapsed
+    inner-clock time since the previous charge/wait IS that dispatch's
+    cost — real dispatch+host time under a wall clock, the deterministic
+    charged cost under a sim clock. Idle waits (``wait_until``) advance
+    the mark without emitting events, so the trace records busy time
+    only.
+    """
+
+    def __init__(self, inner=None) -> None:
+        if inner is None:
+            from repro.serving.request import WallClock
+
+            inner = WallClock()
+        self.inner = inner
+        self.events: List[TraceEvent] = []
+        self._mark = inner.now()
+        self._prev: Optional[str] = None
+
+    def now(self) -> float:
+        return self.inner.now()
+
+    def charge(self, kind: str, n: int = 1) -> None:
+        self.inner.charge(kind, n)
+        t1 = self.inner.now()
+        cost = max(t1 - self._mark, 0.0)
+        eid = f"{kind}{len(self.events)}"
+        self.events.append(
+            TraceEvent(
+                eid,
+                kind,
+                kind,
+                cost,
+                deps=(self._prev,) if self._prev else (),
+                meta={"n": n},
+            )
+        )
+        self._mark = t1
+        self._prev = eid
+
+    def wait_until(self, t: float) -> None:
+        self.inner.wait_until(t)
+        self._mark = self.inner.now()
+
+    def trace(self, name: str = "serve", **provenance) -> Trace:
+        """The recorded dispatch chain as a replayable trace; the
+        measured step is the engine's total busy (charged) time."""
+        busy = sum(ev.cost_s for ev in self.events)
+        lanes: Dict[str, int] = {}
+        for ev in self.events:
+            lanes[ev.kind] = lanes.get(ev.kind, 0) + 1
+        trace = Trace(
+            name=name,
+            kind="serve",
+            measured_step_s=busy,
+            samples_s=[busy],
+            events=list(self.events),
+            meta={"busy_s": busy, "dispatches": dict(lanes)},
+            **provenance,
+        )
+        trace.validate()
+        return trace

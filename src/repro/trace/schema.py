@@ -1,0 +1,219 @@
+"""Trace schema: a serializable DAG of timed events (DESIGN.md §3).
+
+One :class:`Trace` is the record of one measured step (a train step, a
+serving run, one scaling-matrix cell): a list of :class:`TraceEvent`
+nodes whose ``deps`` edges form a DAG, plus the measured wall-clock
+samples the DAG was decomposed from, the provenance of the cell
+(arch/shape/mesh/devices), an environment fingerprint (same
+``env_fingerprint()`` as ``BenchRecord`` — traces from different hosts
+are never silently comparable), and a schema version.
+
+The JSON layout is deliberately flat (``json.dumps(trace.to_dict())``)
+so traces survive the subprocess boundary the scaling matrix runs
+behind, land in ``results/traces/`` as CI artifacts, and round-trip
+byte-stable through :meth:`Trace.save` / :func:`load_trace`.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, field
+from pathlib import Path
+from typing import Any, Dict, List, Tuple
+
+from repro.bench.record import env_fingerprint
+
+TRACE_SCHEMA_VERSION = 1
+
+# event categories the replayer understands as parallel lanes
+KINDS = ("compute", "memory", "collective", "prefill", "decode", "host")
+
+
+class TraceError(ValueError):
+    """Malformed trace: duplicate/unknown event ids, cycles, bad costs."""
+
+
+@dataclass
+class TraceEvent:
+    """One timed node of the DAG.
+
+    ``kind`` is the resource lane (compute / memory / collective /
+    prefill / decode / host), ``op`` the finer label (HLO opcode such as
+    ``dot`` or ``all-reduce``, or a dispatch label), ``cost_s`` the time
+    the event occupies its lane, and ``deps`` the event ids that must
+    finish before this one starts.
+    """
+
+    eid: str
+    kind: str
+    op: str = ""
+    cost_s: float = 0.0
+    deps: Tuple[str, ...] = ()
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = asdict(self)
+        d["deps"] = list(self.deps)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "TraceEvent":
+        return cls(
+            eid=str(d["eid"]),
+            kind=str(d.get("kind", "compute")),
+            op=str(d.get("op", "")),
+            cost_s=float(d.get("cost_s", 0.0)),
+            deps=tuple(d.get("deps", ())),
+            meta=dict(d.get("meta", {})),
+        )
+
+
+@dataclass
+class Trace:
+    """A captured, replayable step: DAG + measurement + provenance."""
+
+    name: str
+    kind: str = "train_step"  # train_step | serve | pp_step
+    arch: str = ""
+    shape: str = ""
+    mesh: str = ""  # "2x4"-style (data x model)
+    n_devices: int = 1
+    measured_step_s: float = 0.0  # median of samples_s
+    samples_s: List[float] = field(default_factory=list)
+    events: List[TraceEvent] = field(default_factory=list)
+    meta: Dict[str, Any] = field(default_factory=dict)
+    env: Dict[str, Any] = field(default_factory=env_fingerprint)
+    version: int = TRACE_SCHEMA_VERSION
+
+    # --------------------------------------------------------- validation
+    def validate(self) -> None:
+        """Raise :class:`TraceError` on structural problems the replayer
+        cannot recover from (duplicate ids, dangling deps, negative
+        costs). Cycles are detected by :func:`repro.trace.replay.toposort`
+        at replay time, where the offending ids can be named."""
+        seen: set = set()
+        for ev in self.events:
+            if ev.eid in seen:
+                raise TraceError(f"{self.name}: duplicate event id {ev.eid!r}")
+            seen.add(ev.eid)
+            if ev.cost_s < 0:
+                raise TraceError(
+                    f"{self.name}: event {ev.eid!r} has negative cost "
+                    f"{ev.cost_s}"
+                )
+        for ev in self.events:
+            for dep in ev.deps:
+                if dep not in seen:
+                    raise TraceError(
+                        f"{self.name}: event {ev.eid!r} depends on unknown "
+                        f"event {dep!r}"
+                    )
+
+    # ------------------------------------------------------------- lanes
+    def lane_seconds(self) -> Dict[str, float]:
+        """Total event cost per lane (kind) — the decomposed step."""
+        out: Dict[str, float] = {}
+        for ev in self.events:
+            out[ev.kind] = out.get(ev.kind, 0.0) + ev.cost_s
+        return out
+
+    def calibration(self) -> Dict[str, float]:
+        """Host-effective rates measured by this trace, for the
+        trace-driven ``mesh_advisor.advise(..., calibration=...)`` mode.
+
+        Derived from the per-lane decomposition: the effective FLOP/s is
+        the trace's HLO FLOPs over the time its compute lane actually
+        took on this host (ditto bytes/HBM and ICI traffic), and
+        ``useful_flops_scale`` is measured-HLO-FLOPs / analytic model
+        FLOPs — the remat/attention overhead an analytic count misses.
+        Lanes the trace never exercised fall back to the hardware peak
+        discounted by the overall measured/roofline ratio."""
+        from repro.core.roofline import (
+            HBM_BW,
+            ICI_BW_PER_LINK,
+            PEAK_FLOPS_BF16,
+        )
+
+        lanes = self.lane_seconds()
+        ratio = float(self.meta.get("calibration_ratio", 1.0)) or 1.0
+        out: Dict[str, float] = {"calibration_ratio": ratio}
+
+        def rate(amount_key: str, lane: str, peak: float) -> float:
+            amount = float(self.meta.get(amount_key, 0.0))
+            t = lanes.get(lane, 0.0)
+            if amount > 0 and t > 0:
+                return amount / t
+            return peak / ratio
+
+        out["flops_per_s"] = rate("flops", "compute", PEAK_FLOPS_BF16)
+        out["hbm_bytes_per_s"] = rate("bytes", "memory", HBM_BW)
+        out["ici_bytes_per_s"] = rate(
+            "ici_bytes", "collective", ICI_BW_PER_LINK
+        )
+        model_flops = float(self.meta.get("model_flops", 0.0))
+        flops_global = float(self.meta.get("flops", 0.0)) * self.n_devices
+        if model_flops > 0 and flops_global > 0:
+            out["useful_flops_scale"] = flops_global / model_flops
+        return out
+
+    # ------------------------------------------------------ serialization
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "name": self.name,
+            "kind": self.kind,
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "n_devices": self.n_devices,
+            "measured_step_s": self.measured_step_s,
+            "samples_s": list(self.samples_s),
+            "events": [ev.to_dict() for ev in self.events],
+            "meta": self.meta,
+            "env": self.env,
+            "version": self.version,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "Trace":
+        version = int(d.get("version", 0))
+        if version > TRACE_SCHEMA_VERSION:
+            raise TraceError(
+                f"trace schema v{version} is newer than this reader "
+                f"(v{TRACE_SCHEMA_VERSION})"
+            )
+        return cls(
+            name=str(d["name"]),
+            kind=str(d.get("kind", "train_step")),
+            arch=str(d.get("arch", "")),
+            shape=str(d.get("shape", "")),
+            mesh=str(d.get("mesh", "")),
+            n_devices=int(d.get("n_devices", 1)),
+            measured_step_s=float(d.get("measured_step_s", 0.0)),
+            samples_s=[float(s) for s in d.get("samples_s", ())],
+            events=[TraceEvent.from_dict(e) for e in d.get("events", ())],
+            meta=dict(d.get("meta", {})),
+            env=dict(d.get("env", {})),
+            version=version or TRACE_SCHEMA_VERSION,
+        )
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, text: str) -> "Trace":
+        return cls.from_dict(json.loads(text))
+
+    def save(self, path: str | Path) -> Path:
+        """Atomic write (tmp + rename), like the bench JSONL sink."""
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        tmp = path.with_suffix(path.suffix + ".tmp")
+        tmp.write_text(self.to_json() + "\n")
+        tmp.replace(path)
+        return path
+
+
+def load_trace(path: str | Path) -> Trace:
+    trace = Trace.from_json(Path(path).read_text())
+    trace.validate()
+    return trace

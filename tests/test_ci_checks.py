@@ -150,6 +150,87 @@ def test_regression_gate_fails_when_it_cannot_trip(tmp_path):
     assert code == 1
 
 
+def _trace_records(bad_cell=None, drop_cell=None, whatif=True):
+    recs = []
+    for name in ci_checks._TRACE_CELLS:
+        if name == drop_cell:
+            continue
+        predicted = 1300.0 if name == bad_cell else 1010.0
+        recs.append(BenchRecord(
+            name=name, group="trace_replay", us_per_call=1000.0,
+            derived={"measured_us": 1000.0, "predicted_us": predicted,
+                     "rel_err": 0.01}))  # stale on purpose: gate recomputes
+    recs.append(BenchRecord(
+        name="trace_replay/serve_paged", group="trace_replay",
+        us_per_call=500.0,
+        derived={"busy_us": 500.0, "predicted_us": 500.0, "rel_err": 0.0}))
+    if whatif:
+        recs.append(BenchRecord(
+            name="trace_replay/whatif_8x1", group="trace_replay",
+            us_per_call=0.0,
+            derived={"measured_us": 9000.0, "predicted_us": 120.0,
+                     "ratio": 0.013}))
+    return recs
+
+
+def test_trace_replay_passes_on_in_bound_cells(tmp_path, capsys):
+    assert _run(tmp_path, _trace_records(), "trace-replay-error") == 0
+    assert "self-test tripped OK" in capsys.readouterr().out
+
+
+def test_trace_replay_recomputes_and_rejects_drifted_cell(tmp_path, capsys):
+    """The stored rel_err says 0.01 but predicted/measured says 0.30 —
+    the gate must recompute and trip, not trust the stale field."""
+    bad = _trace_records(bad_cell="trace_replay/tp4")
+    assert _run(tmp_path, bad, "trace-replay-error") == 1
+    assert "trace_replay/tp4" in capsys.readouterr().err
+
+
+def test_trace_replay_requires_every_matrix_cell(tmp_path, capsys):
+    partial = _trace_records(drop_cell="trace_replay/mix_2x4")
+    assert _run(tmp_path, partial, "trace-replay-error") == 1
+    assert "missing record" in capsys.readouterr().err
+
+
+def test_trace_replay_requires_whatif_report_rows(tmp_path, capsys):
+    assert _run(tmp_path, _trace_records(whatif=False),
+                "trace-replay-error") == 1
+    assert "whatif" in capsys.readouterr().err
+
+
+def test_trace_replay_does_not_gate_whatif_error(tmp_path):
+    """A wildly wrong what-if prediction (simulated-host contention,
+    DESIGN.md §4) must NOT fail the gate — only identity cells gate."""
+    recs = _trace_records()
+    recs[-1].derived["predicted_us"] = 1.0  # ratio 1e-4 vs measured
+    assert _run(tmp_path, recs, "trace-replay-error") == 0
+
+
+def test_doc_refs_passes_on_the_repo(capsys):
+    assert ci_checks.main(["doc-refs"]) == 0
+    assert "self-test tripped 3 planted findings OK" in (
+        capsys.readouterr().out)
+
+
+def test_doc_refs_trips_on_planted_tree(tmp_path):
+    (tmp_path / "DESIGN.md").write_text("## §1 Only section\n")
+    (tmp_path / "NOTES.md").write_text(
+        "Good: DESIGN.md §1. Bad: DESIGN.md §7 and MISSING.md §1.\n")
+    findings = ci_checks._doc_ref_findings(tmp_path)
+    assert len(findings) == 2
+    assert any("no '§7' heading" in f for f in findings)
+    assert any("missing file" in f for f in findings)
+    # flags are only policed in the named prose files
+    (tmp_path / "findings.md").write_text("pass --not-a-real-flag\n")
+    assert any("--not-a-real-flag" in f
+               for f in ci_checks._doc_ref_findings(tmp_path))
+
+
+def test_doc_refs_exit_nonzero_on_dangling_root(tmp_path):
+    (tmp_path / "README.md").write_text("see GHOST.md §3\n")
+    assert ci_checks.main(["doc-refs", "--root", str(tmp_path)]) == 1
+
+
 def test_static_analysis_gate_passes(capsys):
     assert ci_checks.main(["static-analysis", "--skip-graphs"]) == 0
     out = capsys.readouterr().out

@@ -1,0 +1,257 @@
+"""repro.trace: schema round-trip + validation, DAG replay correctness
+(toposort, earliest-start, critical path), what-if edit monotonicity,
+the serving TracingClock seam, cross-split prediction plumbing, and one
+real 2-device matrix cell whose identity replay must sit inside the CI
+gate's 25% bound (DESIGN.md §3)."""
+import json
+
+import pytest
+
+from conftest import run_with_devices
+from repro.serving import ContinuousEngine, SimClock
+from repro.trace import (
+    Trace,
+    TraceError,
+    TraceEvent,
+    TracingClock,
+    advise_from_trace,
+    capture_matrix_cell,
+    dag_from_cost_summary,
+    load_trace,
+    predict_split,
+    replay,
+    scale_kind,
+    scale_op,
+    set_cost,
+    toposort,
+)
+
+from test_serving import (SPAN, _stub_requests, stub_cache_init,
+                          stub_decode, stub_prefill)
+
+
+def _diamond(costs=(0.0, 3.0, 5.0, 1.0)):
+    """root -> {left, right} -> sink; right is the critical branch."""
+    a, b, c, d = costs
+    return Trace(name="diamond", events=[
+        TraceEvent("root", "host", "dispatch", a),
+        TraceEvent("left", "compute", "dot", b, deps=("root",)),
+        TraceEvent("right", "memory", "copy", c, deps=("root",)),
+        TraceEvent("sink", "host", "sync", d, deps=("left", "right")),
+    ])
+
+
+def _train_like(compute=4.0, memory=2.0):
+    """A minimal capture_train_trace-shaped trace predict_split accepts."""
+    tr = _diamond((0.0, compute, memory, 0.0))
+    tr.meta.update({
+        "split": [1, 1], "param_count": 1e5, "d_model": 128, "layers": 2,
+        "tokens": 512, "bytes": 1.2e6, "flops": 3e8, "calibration_ratio": 50.0,
+    })
+    tr.measured_step_s = max(compute, memory)
+    tr.samples_s = [tr.measured_step_s]
+    return tr
+
+
+# ------------------------------------------------------------------ schema
+def test_trace_json_round_trip_is_byte_stable(tmp_path):
+    tr = _diamond()
+    tr.meta["calibration_ratio"] = 2.5
+    back = Trace.from_json(tr.to_json())
+    assert back.to_json() == tr.to_json()
+    assert [e.eid for e in back.events] == ["root", "left", "right", "sink"]
+    assert back.events[3].deps == ("left", "right")
+    p = tr.save(tmp_path / "traces" / "diamond.json")
+    loaded = load_trace(p)
+    assert loaded.to_json() == tr.to_json()
+    # the env fingerprint rides along like BenchRecord's
+    assert "python" in loaded.env
+
+
+def test_validate_rejects_structural_damage():
+    dup = _diamond()
+    dup.events.append(TraceEvent("left", "compute", "dot", 1.0))
+    with pytest.raises(TraceError, match="duplicate"):
+        dup.validate()
+    neg = _diamond((0.0, -1.0, 5.0, 0.0))
+    with pytest.raises(TraceError, match="negative"):
+        neg.validate()
+    dangling = _diamond()
+    dangling.events[1] = TraceEvent("left", "compute", "dot", 3.0,
+                                    deps=("ghost",))
+    with pytest.raises(TraceError, match="unknown"):
+        dangling.validate()
+
+
+def test_newer_schema_version_is_refused():
+    d = _diamond().to_dict()
+    d["version"] = 999
+    with pytest.raises(TraceError, match="newer"):
+        Trace.from_dict(d)
+
+
+# ------------------------------------------------------------------ replay
+def test_toposort_respects_deps_in_any_input_order():
+    events = list(reversed(_diamond().events))
+    order = [ev.eid for ev in toposort(events)]
+    assert order.index("root") < order.index("left") < order.index("sink")
+    assert order.index("root") < order.index("right") < order.index("sink")
+
+
+def test_toposort_names_cycle_members():
+    cyc = [TraceEvent("a", "compute", deps=("b",)),
+           TraceEvent("b", "compute", deps=("a",))]
+    with pytest.raises(TraceError, match="cycle.*'a', 'b'"):
+        toposort(cyc)
+
+
+def test_identity_replay_is_earliest_start_over_the_dag():
+    res = replay(_diamond())
+    # parallel branches: sink starts when the slower branch finishes
+    assert res.predicted_s == pytest.approx(6.0)
+    assert res.finish_s["left"] == pytest.approx(3.0)
+    assert res.finish_s["right"] == pytest.approx(5.0)
+    assert res.critical_path == ["root", "right", "sink"]
+    assert res.dominant_lane == "memory"
+
+
+def test_replay_matches_recorded_step_on_decomposed_dag():
+    """The capture-layer invariant the CI gate relies on: a DAG built by
+    dag_from_cost_summary replays to the measured step exactly."""
+    summary = {
+        "flops_by_op": {"dot": 8e9, "add": 1e9, "exp": 5e8},
+        "bytes_by_op": {"copy": 2e9, "fusion": 1e9},
+        "collective_ici_by_op": {"all-reduce": 3e8},
+    }
+    measured = 0.125
+    events, extras = dag_from_cost_summary(summary, measured, ops_per_lane=2)
+    tr = Trace(name="cell", events=events, measured_step_s=measured,
+               meta=extras)
+    assert replay(tr).predicted_s == pytest.approx(measured, rel=1e-9)
+    # the tail "other" event keeps lane totals exact despite ops_per_lane
+    assert any(ev.op == "other" for ev in events)
+    assert extras["calibration_ratio"] > 0
+
+
+def test_empty_summary_falls_back_to_opaque_step():
+    events, extras = dag_from_cost_summary({}, 0.5)
+    tr = Trace(name="opaque", events=events, measured_step_s=0.5)
+    assert replay(tr).predicted_s == pytest.approx(0.5)
+    assert extras["calibration_ratio"] == 1.0
+
+
+# ----------------------------------------------------------------- what-if
+def test_edit_monotonicity_halving_never_increases_prediction():
+    base = replay(_diamond()).predicted_s
+    for edit in (scale_op("copy", 0.5), scale_kind("memory", 0.5),
+                 scale_op("dot", 0.5), set_cost("right", 0.0)):
+        assert replay(_diamond(), edits=[edit]).predicted_s <= base
+
+
+def test_whatif_edit_can_shift_the_critical_path():
+    # halving the memory branch (5.0 -> 2.5) hands the critical path to
+    # the 3.0s compute branch; the 1.0s sink still runs after it
+    res = replay(_diamond(), edits=[scale_kind("memory", 0.5)])
+    assert res.predicted_s == pytest.approx(4.0)
+    assert res.critical_path == ["root", "left", "sink"]
+    assert res.dominant_lane == "compute"
+
+
+def test_negative_edit_is_refused():
+    with pytest.raises(TraceError, match="negative"):
+        replay(_diamond(), edits=[scale_op("copy", -1.0)])
+
+
+def test_predict_split_requires_train_capture_meta():
+    with pytest.raises(TraceError, match="meta lacks"):
+        predict_split(_diamond(), (2, 1))
+
+
+def test_predict_split_scales_lanes_by_first_principles():
+    tr = _train_like(compute=4.0, memory=2.0)
+    same = predict_split(tr, (1, 1))
+    # identity split: no collectives, lanes unchanged -> compute-bound
+    assert same.predicted_s == pytest.approx(4.0)
+    dp2 = predict_split(tr, (2, 1))
+    # compute halves; DP adds a gradient all-reduce, so the prediction
+    # can never undercut the pure-compute floor
+    assert dp2.finish_s["compute"] == pytest.approx(2.0)
+    assert dp2.predicted_s >= 2.0
+    assert dp2.finish_s["collective"] > 0.0
+    tp2 = predict_split(tr, (1, 2))
+    assert tp2.finish_s["compute"] == pytest.approx(2.0)
+    assert tp2.finish_s["collective"] > 0.0
+    with pytest.raises(TraceError, match="bad split"):
+        predict_split(tr, (0, 2))
+
+
+# ---------------------------------------------------------- serving capture
+def test_tracing_clock_records_busy_time_only():
+    clk = TracingClock(SimClock(prefill_cost_s=10.0, decode_cost_s=1.0))
+    clk.charge("prefill")
+    clk.wait_until(clk.now() + 100.0)  # idle gap must not become an event
+    clk.charge("decode", n=3)
+    tr = clk.trace("serve/unit", n_devices=1)
+    assert [ev.kind for ev in tr.events] == ["prefill", "decode"]
+    assert tr.events[1].deps == (tr.events[0].eid,)
+    assert tr.measured_step_s == pytest.approx(13.0)
+    assert tr.meta["dispatches"] == {"prefill": 1, "decode": 1}
+    # the dispatch chain replays to the engine's busy time exactly
+    assert replay(tr).predicted_s == pytest.approx(13.0)
+
+
+def test_tracing_clock_traces_a_real_engine_run():
+    """Dropping TracingClock into ContinuousEngine at the clock seam must
+    capture every dispatch without touching engine code."""
+    clk = TracingClock(SimClock(prefill_cost_s=10.0, decode_cost_s=1.0))
+    eng = ContinuousEngine(stub_prefill, stub_decode, None, stub_cache_init,
+                           slots=2, cache_span=SPAN, clock=clk)
+    report = eng.run(_stub_requests(3, budgets=(4,)))
+    tr = clk.trace("serve/continuous")
+    assert sum(tr.meta["dispatches"].values()) == len(tr.events)
+    assert tr.meta["dispatches"]["prefill"] == report.prefills
+    assert replay(tr).predicted_s == pytest.approx(tr.measured_step_s)
+
+
+# ------------------------------------------------- real capture (2 devices)
+def test_matrix_cell_capture_replays_within_the_ci_bound():
+    """One real 2-device scaling-matrix cell end to end: subprocess
+    capture -> JSON transport -> identity replay within the 25% gate."""
+    traces = capture_matrix_cell(
+        2, [(1, 2)], batch=4, seq=16,
+        reduce_kw=dict(layers=2, d_model=64, d_ff=128, vocab=128),
+        iters=3, warmup=1)
+    assert len(traces) == 1
+    tr = traces[0]
+    assert (tr.mesh, tr.n_devices) == ("1x2", 2)
+    assert tr.meta["split"] == [1, 2]
+    res = replay(tr)
+    rel = abs(res.predicted_s - tr.measured_step_s) / tr.measured_step_s
+    assert rel <= 0.25, f"identity replay drifted {rel:.3f} from measured"
+    # a TP cell must have a populated collective lane (the Megatron
+    # activation psums are in the compiled module's per-device HLO)
+    assert tr.lane_seconds().get("collective", 0.0) > 0.0
+    # and the trace-calibrated advisor must run off this trace alone
+    ranked = advise_from_trace(tr, 2)
+    assert ranked and ranked[0].mesh.shape in [(2, 1), (1, 2)]
+    assert ranked[0].step_s > 0.0
+
+
+def test_capture_train_trace_requires_enough_devices():
+    code = """
+from repro.trace.capture import capture_train_trace
+try:
+    capture_train_trace(split=(8, 8), iters=1, warmup=0)
+except RuntimeError as e:
+    assert "needs 64 devices" in str(e), e
+    print("REFUSED-OK")
+"""
+    assert "REFUSED-OK" in run_with_devices(code, n_devices=1)
+
+
+def test_trace_json_survives_line_transport():
+    """The subprocess transport contract: one trace per stdout line."""
+    tr = _train_like()
+    line = tr.to_json()
+    assert "\n" not in line
+    assert json.loads(line)["name"] == tr.name

@@ -11,6 +11,8 @@ workflow file:
     PYTHONPATH=src python tools/ci_checks.py paged-parity
     PYTHONPATH=src python tools/ci_checks.py prefix-parity
     PYTHONPATH=src python tools/ci_checks.py chaos-parity
+    PYTHONPATH=src python tools/ci_checks.py trace-replay-error
+    PYTHONPATH=src python tools/ci_checks.py doc-refs
     PYTHONPATH=src python tools/ci_checks.py inject-slowdown --factor 2
     PYTHONPATH=src python tools/ci_checks.py regression-gate
 
@@ -29,6 +31,16 @@ multi-turn replay, strictly-more admissions, warm TTFT < cold TTFT);
 seeded fault plan and asserts every survivor is token-identical to the
 fault-free run with zero leaked pages, then self-tests its own leak
 detector by no-op'ing the engine's page-release seam.
+
+``trace-replay-error`` gates the trace→DAG→replay cost model: every
+captured scaling-matrix cell's identity replay must land within
+``--max-rel-err`` (default 25%) of the measurement it decomposed, and a
+doctored prediction must make the gate trip (self-test).
+``doc-refs`` is the documentation lint: ``FILE.md §N``-style references
+must resolve to an existing file with that section heading, and CLI
+flags named in README/EXPERIMENTS/DESIGN prose must be defined by some
+``launch/*``/``benchmarks/run``/``tools`` argparse; a planted dangling
+reference must fire (self-test).
 
 Every check takes ``--jsonl`` (default ``results/bench/latest.jsonl``)
 and exits 0/1; assertion messages name the offending record.
@@ -474,6 +486,207 @@ def check_static_analysis(args: argparse.Namespace) -> int:
     return 0
 
 
+_TRACE_CELLS = (
+    "trace_replay/dp1", "trace_replay/dp2", "trace_replay/dp4",
+    "trace_replay/dp8", "trace_replay/tp2", "trace_replay/tp4",
+    "trace_replay/tp8", "trace_replay/mix_4x2", "trace_replay/mix_2x4",
+)
+
+
+def _trace_cell_errors(recs, max_rel_err: float) -> dict:
+    """name -> recomputed rel_err for every gated trace-replay record;
+    raises AssertionError on a missing cell or an out-of-bound error.
+    Recomputes from predicted_us/measured_us so a doctored prediction
+    cannot hide behind a stale stored rel_err."""
+    by_name = {r.name: r for r in recs if r.group == "trace_replay"}
+    out = {}
+    for name in _TRACE_CELLS + ("trace_replay/serve_paged",):
+        assert name in by_name, f"missing record {name}"
+        d = by_name[name].derived
+        measured = float(d.get("measured_us", d.get("busy_us", 0.0)))
+        predicted = float(d["predicted_us"])
+        assert measured > 0, f"{name}: non-positive measured_us {measured}"
+        rel = abs(predicted - measured) / measured
+        assert rel <= max_rel_err, (
+            f"{name}: replay predicted {predicted:.1f}us vs measured "
+            f"{measured:.1f}us — rel_err {rel:.4f} > {max_rel_err}"
+        )
+        out[name] = rel
+    return out
+
+
+def check_trace_replay(args: argparse.Namespace) -> int:
+    """The trace→DAG→replay prediction gate (DESIGN.md §3):
+
+    * every captured scaling-matrix cell (dp1..8, tp2..8, 4x2, 2x4) and
+      the serving dispatch trace must be present in the JSONL with an
+      identity-replay prediction within ``--max-rel-err`` of the
+      measurement the DAG was decomposed from — the bound on how much
+      the lane decomposition is allowed to drift from what was measured;
+    * cross-split what-if records (``trace_replay/whatif_*``) must exist
+      but are REPORTED, not gated (simulated-host contention, see
+      DESIGN.md §4) — the gate only insists they carry both numbers;
+    * self-test: doctoring one cell's predicted_us by 2x the bound MUST
+      trip the checker — proving the gate can fire.
+    """
+    import copy
+
+    recs = _records(args.jsonl)
+    errors = _trace_cell_errors(recs, args.max_rel_err)
+    whatif = [r for r in recs if r.name.startswith("trace_replay/whatif_")]
+    assert whatif, "no trace_replay/whatif_* records (cross-split report)"
+    for r in whatif:
+        assert "predicted_us" in r.derived and "measured_us" in r.derived, (
+            f"{r.name}: what-if record lacks predicted/measured pair"
+        )
+
+    doctored = copy.deepcopy(recs)
+    victim = next(r for r in doctored if r.name == _TRACE_CELLS[0])
+    victim.derived["predicted_us"] = (
+        float(victim.derived["measured_us"]) * (1.0 + 2.0 * args.max_rel_err)
+    )
+    try:
+        _trace_cell_errors(doctored, args.max_rel_err)
+    except AssertionError:
+        pass
+    else:
+        raise AssertionError(
+            "self-test: a doctored prediction passed the gate — "
+            "trace-replay-error cannot trip"
+        )
+    worst = max(errors, key=lambda k: errors[k])
+    print(
+        f"trace-replay-error: {len(errors)} cells within "
+        f"{args.max_rel_err:.0%} (worst {worst} at {errors[worst]:.4f}), "
+        f"{len(whatif)} what-if rows reported; self-test tripped OK"
+    )
+    return 0
+
+
+# ------------------------------------------------------------- doc-refs
+_MD_EXCLUDE = {"ISSUE.md", "PAPER.md", "PAPERS.md", "SNIPPETS.md",
+               "CHANGES.md"}
+# files whose prose names CLI flags that must exist in some argparse
+_FLAG_CHECKED = {"README.md", "EXPERIMENTS.md", "DESIGN.md", "findings.md"}
+# flags documented but owned by other programs (XLA, pytest, pip, git)
+_FLAG_ALLOW_PREFIXES = ("--xla",)
+_FLAG_ALLOW = {"--check"}  # `ruff format --check` in the pre-push recipe
+_SECTION_REF_RE = None  # compiled lazily (module import stays cheap)
+
+
+def _doc_ref_findings(root: Path) -> list:
+    """All dangling ``FILE.md §N`` references and undefined CLI flags
+    under ``root``. Pure function of the tree so the self-test can run
+    it over a planted fixture directory."""
+    import re
+
+    ref_re = re.compile(r"([A-Za-z0-9_\-./]+\.md)\s*§\s*(\d+)")
+    flag_re = re.compile(r"(--[a-z][a-z0-9][a-z0-9-]*)")
+    heading_re_tmpl = r"(?m)^#{{1,6}}[^\n]*§\s*{n}\b"
+
+    md_files = [
+        p for p in sorted(root.rglob("*.md"))
+        if p.name not in _MD_EXCLUDE
+        and not any(part.startswith(".") for part in p.relative_to(root).parts)
+    ]
+
+    # argparse-defined flags across every CLI the docs may reference
+    defined = set()
+    cli_sources = [
+        *sorted((root / "src" / "repro" / "launch").glob("*.py")),
+        *sorted((root / "src" / "repro" / "analysis").glob("__main__.py")),
+        root / "benchmarks" / "run.py",
+        root / "tools" / "ci_checks.py",
+    ]
+    arg_re = re.compile(r"add_argument\(\s*[\"'](--[A-Za-z0-9][A-Za-z0-9-]*)")
+    for src in cli_sources:
+        if not src.exists():
+            continue
+        text = src.read_text()
+        for m in arg_re.finditer(text):
+            defined.add(m.group(1))
+            # BooleanOptionalAction also registers the --no- negation
+            if "BooleanOptionalAction" in text[m.start():m.start() + 300]:
+                defined.add("--no-" + m.group(1)[2:])
+
+    findings = []
+    for md in md_files:
+        rel = md.relative_to(root)
+        text = md.read_text()
+        for m in ref_re.finditer(text):
+            fname, sec = m.group(1), m.group(2)
+            target = root / fname
+            if not target.exists():
+                target = md.parent / fname
+            if not target.exists():
+                findings.append(
+                    f"{rel}: reference '{m.group(0)}' -> missing file "
+                    f"{fname}"
+                )
+                continue
+            if not re.search(heading_re_tmpl.format(n=sec),
+                             target.read_text()):
+                findings.append(
+                    f"{rel}: reference '{m.group(0)}' -> {fname} has no "
+                    f"'§{sec}' heading"
+                )
+        if md.name in _FLAG_CHECKED:
+            for m in flag_re.finditer(text):
+                flag = m.group(1)
+                if flag in defined or flag in _FLAG_ALLOW:
+                    continue
+                if flag.startswith(_FLAG_ALLOW_PREFIXES):
+                    continue
+                findings.append(
+                    f"{rel}: CLI flag '{flag}' is not defined by any "
+                    "launch/*, benchmarks/run, repro.analysis, or "
+                    "ci_checks argparse"
+                )
+    return findings
+
+
+def check_doc_refs(args: argparse.Namespace) -> int:
+    """The documentation-reference lint:
+
+    * every ``FILE.md §N`` citation in tracked markdown must point at an
+      existing file containing a ``§N`` heading (the DESIGN.md contract:
+      EXPERIMENTS.md cites §2/§4 by number, so the numbers are API);
+    * every ``--flag`` named in README/EXPERIMENTS/DESIGN/findings prose
+      must be defined by an ``add_argument`` in ``launch/*``,
+      ``benchmarks/run``, ``repro.analysis``, or ``tools/ci_checks``;
+    * self-test: a planted fixture tree with a dangling §-reference and
+      an undefined flag MUST produce findings — proving the lint fires.
+    """
+    import tempfile
+
+    root = Path(args.root).resolve()
+    findings = _doc_ref_findings(root)
+    assert not findings, "dangling doc references:\n" + "\n".join(
+        f"  {f}" for f in findings
+    )
+
+    with tempfile.TemporaryDirectory() as td:
+        planted = Path(td)
+        (planted / "DESIGN.md").write_text("## §1 Real section\n")
+        (planted / "README.md").write_text(
+            "See DESIGN.md §1, DESIGN.md §99, GHOST.md §2, and pass "
+            "--definitely-not-a-flag to the CLI.\n"
+        )
+        tripped = _doc_ref_findings(planted)
+    assert len(tripped) == 3, (
+        f"self-test: planted fixtures produced {len(tripped)} findings "
+        f"(wanted 3: missing section, missing file, undefined flag): "
+        f"{tripped}"
+    )
+    n_md = len([p for p in root.rglob('*.md')
+                if p.name not in _MD_EXCLUDE])
+    print(
+        f"doc-refs: {n_md} markdown files clean; self-test tripped "
+        f"{len(tripped)} planted findings OK"
+    )
+    return 0
+
+
 def _inject(jsonl: str, factor: float) -> int:
     from repro.bench import write_jsonl
 
@@ -604,6 +817,20 @@ def main(argv: list[str] | None = None) -> int:
         help="skip the traced hot-path audit (the slow layer)",
     )
     p.set_defaults(fn=check_static_analysis)
+
+    p = sub.add_parser(
+        "trace-replay-error",
+        help="trace DAG identity replay within tolerance per matrix cell",
+    )
+    p.add_argument("--max-rel-err", type=float, default=0.25)
+    p.set_defaults(fn=check_trace_replay)
+
+    p = sub.add_parser(
+        "doc-refs",
+        help="markdown §-references and CLI flags must resolve",
+    )
+    p.add_argument("--root", default=str(REPO))
+    p.set_defaults(fn=check_doc_refs)
 
     p = sub.add_parser(
         "inject-slowdown",

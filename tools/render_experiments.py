@@ -66,6 +66,55 @@ def roofline_table(recs):
          "MODEL_FLOPS", "useful", "MFU"], rows)
 
 
+def trace_tables(bench):
+    """§Trace-replay: identity predicted-vs-measured per captured matrix
+    cell (CI-gated, DESIGN.md §3) and the ungated cross-split what-if
+    report (DESIGN.md §4)."""
+    cells = [r for r in bench
+             if r.group == "trace_replay" and "rel_err" in r.derived
+             and not r.name.startswith("trace_replay/whatif_")]
+    whatif = [r for r in bench
+              if r.name.startswith("trace_replay/whatif_")]
+    if not cells:
+        return ("No trace-replay records in the bench JSONL; "
+                "`python -m benchmarks.run --only trace_replay` "
+                "regenerates them.\n")
+    parts = []
+    rows = []
+    for r in sorted(cells, key=lambda r: r.name):
+        d = r.derived
+        measured = d.get("measured_us", d.get("busy_us", 0.0))
+        rows.append([
+            r.name.split("/", 1)[1], r.mesh or "-",
+            f"{measured / 1e3:.2f}", f"{d['predicted_us'] / 1e3:.2f}",
+            f"{d['rel_err']:.4f}", d.get("dominant", "-"),
+            d.get("n_events", "-"),
+        ])
+    parts.append("Identity replay of each captured cell's DAG vs the "
+                 "measurement it was decomposed from (gated at 25% by "
+                 "`tools/ci_checks.py trace-replay-error`; DESIGN.md §3):\n")
+    parts.append(md_table(
+        ["cell", "split", "measured ms", "predicted ms", "rel_err",
+         "dominant", "events"], rows))
+    if whatif:
+        rows = []
+        for r in sorted(whatif, key=lambda r: r.name):
+            d = r.derived
+            rows.append([
+                r.mesh, f"{d['measured_us'] / 1e3:.2f}",
+                f"{d['predicted_us'] / 1e3:.2f}", f"{d['ratio']:.3f}",
+                d.get("dominant", "-"),
+            ])
+        parts.append("\n\nCross-split what-if predictions from the 1x1 "
+                     "trace alone — REPORTED, not gated: simulated-host "
+                     "cells include shared-core contention no per-device "
+                     "model represents (DESIGN.md §4):\n")
+        parts.append(md_table(
+            ["split", "measured ms", "predicted ms", "pred/meas",
+             "dominant"], rows))
+    return "".join(parts) + "\n"
+
+
 def skips_table():
     from repro.configs import ARCHS
     rows = [[a.name, "long_500k",
@@ -97,16 +146,26 @@ def main():
     single = load("16x16")
     multi = load("2x16x16")
     parts = [HEADER]
+    not_reproduced = (
+        " **Not reproduced at this checkout**: dry-run artifacts "
+        "(`results/dryrun/`) are not checked in; an empty table means "
+        "`launch/dryrun.py --all` has not been run here, not that cells "
+        "failed."
+    )
     parts.append("\n## §Dry-run — single pod (16x16 = 256 chips)\n")
     parts.append(dryrun_table(single))
-    parts.append(f"\n{len(single)}/32 runnable cells compiled. "
-                 "8 `long_500k` cells are noted skips:\n")
+    parts.append(f"\n{len(single)}/32 runnable cells compiled."
+                 + (not_reproduced if not single else "")
+                 + " 8 `long_500k` cells are noted skips:\n")
     parts.append(skips_table())
     parts.append("\n\n## §Dry-run — multi-pod (2x16x16 = 512 chips)\n")
     parts.append(dryrun_table(multi))
-    parts.append(f"\n{len(multi)}/32 runnable cells compiled — the `pod` "
-                 "axis shards (batch over (pod, data); verified by "
-                 "tests/test_parallel.py::test_multi_pod_axis_shards).\n")
+    parts.append(f"\n{len(multi)}/32 runnable cells compiled"
+                 + ("." + not_reproduced if not multi else
+                    " — the `pod` axis shards (batch over (pod, data); "
+                    "verified by "
+                    "tests/test_parallel.py::test_multi_pod_axis_shards).")
+                 + "\n")
     parts.append("\n## §Roofline — single pod, per (arch x shape)\n")
     parts.append(roofline_table(single))
     bench = load_bench_records(BENCH_JSONL)
@@ -114,6 +173,9 @@ def main():
         parts.append("\n\n## §Benchmark harness — "
                      f"`python -m benchmarks.run` ({len(bench)} records)\n")
         parts.append(bench_summary(bench))
+    parts.append("\n\n## §Trace-replay — predicted vs measured "
+                 "(DAG replay cost model)\n")
+    parts.append(trace_tables(bench))
     findings = REPO / "results" / "findings.md"
     if findings.exists():
         parts.append("\n\n" + findings.read_text())
