@@ -31,7 +31,14 @@ applied to the paper's Tier-2 deployment axis:
   goodput under faults, outcome taxonomy, preemption/requeue counters,
   and fault-recovery latency, with zero leaked pages asserted on both
   records (token parity under chaos is gated by ``tools/ci_checks.py
-  chaos-parity``).
+  chaos-parity``);
+* ``serving/pd_disaggregation``     — a chunked-prefill-heavy staggered
+  stream through the interleaved paged engine vs the P/D-disaggregated
+  engine (separate prefill/decode worker pools, one shared page pool):
+  per-role utilization, handoff latency p50/p95, and the decode-step
+  stall distribution — the prefill-interference number disaggregation
+  exists to shrink (token parity and the strict stall ordering are
+  gated by ``tools/ci_checks.py pd-parity``).
 
 Every record carries ``ttft_us`` (median time-to-first-token) and
 per-token ``p50_us``/``p95_us`` stamped from the decode-step samples;
@@ -381,6 +388,80 @@ def chaos_soak(wl: Workload):
     rec = _record(
         f"serving/chaos_{'on' if faulted else 'off'}", report)
     for key in _ROBUST_KEYS:            # faults_* absent on the baseline
+        if key in s:
+            v = s[key]
+            rec.derived[key] = round(v, 4) if isinstance(v, float) else v
+    yield rec
+
+
+# role/handoff/stall keys stamped onto pd_disaggregation records only
+# (established scenarios keep their blessed derived-key sets stable)
+_PD_KEYS = ("prefill_workers", "decode_workers", "prefill_util",
+            "decode_util", "handoffs", "handoff_p50_s", "handoff_p95_s",
+            "queue_depth_peak", "queue_depth_mean",
+            "decode_stall_p50_s", "decode_stall_p95_s")
+
+
+@functools.lru_cache(maxsize=2)
+def _pd_engine(scheduler: str):
+    """Interleaved/disaggregated engine pair for the P/D scenario:
+    identical tiny model, page pool, lane count (2 lanes total on both
+    sides), and chunked prefill — only the loop composition differs.
+    SimClock, so the stall distribution is schedule-determined."""
+    from repro.launch.serve import build_engine
+    from repro.serving import SimClock
+
+    kw = (dict(prefill_workers=1, decode_workers=2)
+          if scheduler == "disaggregated" else {})
+    eng, cfg = build_engine(
+        ARCH, batch=2, prompt_len=16, max_new_tokens=12,
+        scheduler=scheduler, page_size=4, prefill_chunk_tokens=4,
+        clock=SimClock(),
+        reduce_kw=dict(layers=2, d_model=64, vocab=128, d_ff=128), **kw)
+    return eng, cfg
+
+
+def _pd_stream(cfg, n=8, prompt_len=16, budget=12, stagger_s=45.0):
+    """Chunked-prefill-heavy staggered stream: each arrival lands while
+    earlier requests are mid-decode, so the interleaved loop must stall
+    its live decode lanes for every multi-chunk prefill dispatch."""
+    import numpy as np
+
+    from repro.serving import Request
+
+    rng = np.random.default_rng(5)
+    return [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab_size, prompt_len
+                                        ).astype(np.int32),
+                    max_new_tokens=budget, arrival_s=stagger_s * i)
+            for i in range(n)]
+
+
+@scenario(
+    "serving/pd_disaggregation",
+    tags=("tier2", "serving", "paged", "disagg", "measured"),
+    paper_ref="Tier-2 deployment (P/D disaggregation)",
+    workloads=[Workload(label="interleaved", arch=ARCH,
+                        knobs={"scheduler": "paged"}),
+               Workload(label="disaggregated", arch=ARCH,
+                        knobs={"scheduler": "disaggregated"})])
+def pd_disaggregation(wl: Workload):
+    """The same staggered stream through both loop compositions: the
+    interleaved engine prefills and decodes on one timeline (every
+    multi-chunk prefill stalls the live decode lanes), the
+    disaggregated engine runs separate prefill/decode worker pools over
+    one shared page pool and hands pages off between roles. Records
+    carry per-role utilization, handoff latency percentiles, ITL, and
+    the decode-step stall distribution; the cross-record orderings are
+    gated by ``tools/ci_checks.py pd-parity``."""
+    sched = wl.knobs["scheduler"]
+    eng, cfg = _pd_engine(sched)
+    report = eng.run(_pd_stream(cfg))
+    assert report.completed == len(report.metrics), (
+        f"{sched}: {report.completed}/{len(report.metrics)} completed")
+    s = report.summary()
+    rec = _record(f"serving/pd_{wl.label}", report)
+    for key in _PD_KEYS:        # role keys absent on the interleaved run
         if key in s:
             v = s[key]
             rec.derived[key] = round(v, 4) if isinstance(v, float) else v

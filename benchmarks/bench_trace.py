@@ -24,6 +24,14 @@ it was decomposed from.
   ``TracingClock(SimClock)``: the dispatch-chain trace's identity
   replay must equal the engine's busy time exactly (deterministic, so
   ``rel_err`` here is 0 by construction or the seam is broken).
+* ``trace_replay/serve_roles`` — the same chunked-prefill-heavy
+  staggered stream through the interleaved paged loop and the
+  P/D-disaggregated engine, each under ``TracingClock(SimClock)``: the
+  records carry the trace's per-role lane decomposition
+  (``Trace.lane_seconds(by="role")``) next to the decode-step stall
+  distribution — decode interference before/after disaggregation.
+  REPORTED, not gated (the strict stall ordering is gated by
+  ``tools/ci_checks.py pd-parity``).
 
 Selection: ``python -m benchmarks.run --only trace_replay``.
 """
@@ -231,5 +239,69 @@ def trace_replay_serve(wl: Workload):
             "n_events": len(tr.events),
             "prefill_dispatches": tr.meta["dispatches"].get("prefill", 0),
             "decode_dispatches": tr.meta["dispatches"].get("decode", 0),
+        },
+    )
+
+
+@scenario(
+    "trace_replay/serve_roles",
+    tags=("tier2", "serving", "trace_replay", "disagg"),
+    paper_ref="Sec. V guidance loop (per-role serving dispatch lanes)",
+    workloads=[Workload(label="interleaved", arch=ARCH,
+                        knobs={"scheduler": "paged"}),
+               Workload(label="disaggregated", arch=ARCH,
+                        knobs={"scheduler": "disaggregated"})],
+)
+def trace_replay_serve_roles(wl: Workload):
+    """A chunked-prefill-heavy staggered stream under
+    ``TracingClock(SimClock)``, both loop compositions: the trace's
+    role-lane decomposition (``lane_seconds(by="role")``) rides next to
+    the engine's decode-step stall distribution — the decode
+    interference picture before/after P/D disaggregation."""
+    import numpy as np
+
+    from repro.launch.serve import build_engine
+    from repro.serving import Request
+    from repro.serving.request import SimClock
+    from repro.trace import TracingClock, replay
+
+    sched = wl.knobs["scheduler"]
+    clk = TracingClock(SimClock())
+    kw = (dict(prefill_workers=1, decode_workers=2)
+          if sched == "disaggregated" else {})
+    eng, cfg = build_engine(
+        ARCH, batch=2, prompt_len=16, max_new_tokens=12,
+        scheduler=sched, page_size=4, prefill_chunk_tokens=4, clock=clk,
+        reduce_kw=dict(layers=2, d_model=64, vocab=128, d_ff=128), **kw)
+    rng = np.random.default_rng(5)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab_size, 16
+                                        ).astype(np.int32),
+                    max_new_tokens=12, arrival_s=45.0 * i)
+            for i in range(8)]
+    report = eng.run(reqs)
+    s = report.summary()
+    tr = clk.trace(f"serve/{ARCH}/{sched}-roles", arch=ARCH)
+    tr.save(TRACE_DIR / f"{ARCH}-serve-{wl.label}-roles.json")
+    res = replay(tr)
+    lanes = tr.lane_seconds(by="role")
+    yield BenchRecord(
+        name=f"trace_replay/serve_{wl.label}_roles",
+        us_per_call=TimingStats(
+            [ev.cost_s * 1e6 for ev in tr.events if ev.cost_s > 0]),
+        knobs={"scheduler": sched, "requests": len(reqs)},
+        derived={
+            "completed": report.completed,
+            "busy_us": round(tr.measured_step_s * 1e6, 1),
+            "predicted_us": round(res.predicted_s * 1e6, 1),
+            "role_prefill_us": round(lanes.get("prefill", 0.0) * 1e6, 1),
+            "role_decode_us": round(lanes.get("decode", 0.0) * 1e6, 1),
+            "role_handoff_us": round(lanes.get("handoff", 0.0) * 1e6, 1),
+            "decode_stall_p50_s": round(
+                s.get("decode_stall_p50_s", 0.0), 4),
+            "decode_stall_p95_s": round(
+                s.get("decode_stall_p95_s", 0.0), 4),
+            "handoffs": s.get("handoffs", 0),
+            "gated": False,
         },
     )

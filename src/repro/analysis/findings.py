@@ -41,7 +41,8 @@ RULES = {
     # repo-seam AST lint (repro.analysis.seams)
     "RS101": "runtime invariants must raise, not bare-assert",
     "RS102": "page frees only through PagedEngine._release_pages",
-    "RS103": "engine admission must route through admission_error",
+    "RS103": "engine admission must route through admission_error "
+             "(self._validate or the Scheduler.validate seam)",
     "RS104": "no wall-clock time.* calls in Sim-clock code paths",
     "RS105": "no numpy host ops inside jitted step functions",
 }

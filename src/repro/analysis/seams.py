@@ -15,8 +15,9 @@ Rules (catalog in :data:`repro.analysis.findings.RULES`):
   ``_release_pages`` / the ``PageAllocator`` class itself. Going around
   the seam breaks leak accounting and chaos parity.
 * **RS103** — an ``*Engine`` class whose ``run`` never calls
-  ``self._validate(...)``, or whose ``admission_error`` override never
-  defers to ``super().admission_error(...)``.
+  ``self._validate(...)`` (directly or via the extracted
+  ``Scheduler.validate`` seam), or whose ``admission_error`` override
+  never defers to ``super().admission_error(...)``.
 * **RS104** — ``time.time/perf_counter/monotonic/sleep`` calls in
   serving-scoped modules outside a ``*Clock`` class. Sim-clock runs
   must stay deterministic.
@@ -193,15 +194,20 @@ class _SeamVisitor(ast.NodeVisitor):
             if not isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
                 continue
             if item.name == "run":
-                if self._body_is_stub(item) or self._calls(item, "self._validate"):
+                if (
+                    self._body_is_stub(item)
+                    or self._calls(item, "self._validate")
+                    or self._calls_suffix(item, ".validate")
+                ):
                     continue
                 self.findings.append(
                     Finding(
                         "RS103",
                         self.path,
                         item.lineno,
-                        f"{cls.name}.run never calls self._validate(...); "
-                        "requests enter the pool without admission checks",
+                        f"{cls.name}.run never calls self._validate(...) or "
+                        "the Scheduler.validate seam; requests enter the "
+                        "pool without admission checks",
                     )
                 )
             elif item.name == "admission_error" and cls.bases:
@@ -232,6 +238,18 @@ class _SeamVisitor(ast.NodeVisitor):
             if isinstance(node, ast.Call):
                 name = _call_name(node.func)
                 if name is not None and name.startswith(prefix):
+                    return True
+        return False
+
+    @staticmethod
+    def _calls_suffix(fn, suffix: str) -> bool:
+        """Any call whose dotted target ends with ``suffix`` — how the
+        role-composed engines reach admission checks through an
+        extracted ``Scheduler`` (``sched.validate(requests)``)."""
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                name = _call_name(node.func)
+                if name is not None and name.endswith(suffix):
                     return True
         return False
 

@@ -13,6 +13,12 @@ radix cache, and `--num-sessions N --turns T` swaps the Poisson request
 stream for a multi-turn session-replay workload (each turn arrives with
 its accumulated history — the pattern prefix sharing accelerates).
 
+`--scheduler disaggregated` runs the paged model path under separate
+prefill and decode worker pools over one shared page pool
+(`--prefill-workers N --decode-workers M`); the report gains per-role
+utilization, handoff latency percentiles, and decode stall times — the
+P/D-disaggregation interference comparison.
+
 SLO / robustness knobs: `--deadline S` gives every request a finish-by
 budget (missed = outcome `timed_out`, pages reaped); `--priority-mix
 "0:3,5:1"` assigns priorities by weight (higher preempts lower in the
@@ -64,7 +70,8 @@ def build_engine(arch: str, *, batch: int, prompt_len: int,
                  clock=None, page_size: int = 16, num_pages=None,
                  prefill_chunk_tokens: int = 0,
                  prefix_cache: bool = False, fault_plan=None,
-                 reject_invalid: bool = False):
+                 reject_invalid: bool = False,
+                 prefill_workers: int = 1, decode_workers: int = 1):
     """Build a serving engine for ``arch`` (the launcher's plumbing,
     importable so benchmarks and tests share it). ``reduce_kw`` overrides
     the reduction sizes (layers/d_model/vocab/d_ff — the benchmarks use a
@@ -89,13 +96,16 @@ def build_engine(arch: str, *, batch: int, prompt_len: int,
     common = dict(slots=batch, cache_span=span, eos_id=eos_id,
                   greedy=greedy, seed=seed, clock=clock,
                   reject_invalid=reject_invalid)
-    if scheduler == "paged":
+    if scheduler in ("paged", "disaggregated"):
+        paged_kw = dict(page_size=page_size, num_pages=num_pages,
+                        prefill_chunk_tokens=prefill_chunk_tokens,
+                        prefix_cache=prefix_cache, fault_plan=fault_plan)
+        if scheduler == "disaggregated":
+            paged_kw.update(prefill_workers=prefill_workers,
+                            decode_workers=decode_workers)
         engine = make_engine(
             scheduler, model.prefill_chunk, model.decode_step_paged,
-            params, model.paged_cache_init, page_size=page_size,
-            num_pages=num_pages,
-            prefill_chunk_tokens=prefill_chunk_tokens,
-            prefix_cache=prefix_cache, fault_plan=fault_plan, **common)
+            params, model.paged_cache_init, **paged_kw, **common)
     else:
         engine = make_engine(scheduler, prefill_fn, decode_fn, params,
                              model.cache_init, **common)
@@ -109,8 +119,16 @@ def main(argv=None):
                     help="KV slots (continuous) / batch size (static)")
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--max-new-tokens", type=int, default=32)
-    ap.add_argument("--scheduler", choices=("static", "continuous", "paged"),
+    ap.add_argument("--scheduler",
+                    choices=("static", "continuous", "paged",
+                             "disaggregated"),
                     default="continuous")
+    ap.add_argument("--prefill-workers", type=int, default=1,
+                    help="prefill worker pool size (disaggregated "
+                         "scheduler)")
+    ap.add_argument("--decode-workers", type=int, default=1,
+                    help="decode worker pool size (disaggregated "
+                         "scheduler); must divide --batch")
     ap.add_argument("--page-size", type=int, default=16,
                     help="KV tokens per page (paged scheduler)")
     ap.add_argument("--num-pages", type=int, default=0,
@@ -142,8 +160,8 @@ def main(argv=None):
                          "under page pressure (paged scheduler)")
     ap.add_argument("--fault-plan", default="none",
                     help="'none', 'default' (the seeded standard chaos "
-                         "mix), or a FaultPlan JSON path; paged "
-                         "scheduler only")
+                         "mix), or a FaultPlan JSON path; paged/"
+                         "disaggregated schedulers only")
     ap.add_argument("--eos-id", type=int, default=-1,
                     help="EOS token id for early termination (<0 disables)")
     ap.add_argument("--sample", action="store_true",
@@ -158,8 +176,9 @@ def main(argv=None):
     prompt_len = (session_prompt_len if args.num_sessions
                   else args.prompt_len)
     fault_plan = resolve_fault_plan(args.fault_plan, args.seed)
-    if fault_plan is not None and args.scheduler != "paged":
-        ap.error("--fault-plan requires --scheduler paged")
+    if (fault_plan is not None
+            and args.scheduler not in ("paged", "disaggregated")):
+        ap.error("--fault-plan requires --scheduler paged or disaggregated")
     engine, cfg = build_engine(
         args.arch, batch=args.batch, prompt_len=prompt_len,
         max_new_tokens=args.max_new_tokens, scheduler=args.scheduler,
@@ -167,7 +186,9 @@ def main(argv=None):
         eos_id=args.eos_id if args.eos_id >= 0 else None, seed=args.seed,
         page_size=args.page_size, num_pages=args.num_pages or None,
         prefill_chunk_tokens=args.prefill_chunk,
-        prefix_cache=args.prefix_cache, fault_plan=fault_plan)
+        prefix_cache=args.prefix_cache, fault_plan=fault_plan,
+        prefill_workers=args.prefill_workers,
+        decode_workers=args.decode_workers)
     if args.num_sessions:
         requests = synth_sessions(cfg, args.num_sessions, args.turns,
                                   max_new_tokens=args.max_new_tokens,
@@ -213,6 +234,16 @@ def main(argv=None):
               f"recovery_steps mean={s['recovery_steps_mean']:.1f} "
               f"max={s['recovery_steps_max']}  "
               f"pages_leaked={s['pages_leaked']}")
+    if s.get("prefill_workers"):
+        print(f"  roles: prefill_workers={s['prefill_workers']} "
+              f"(util {s['prefill_util']:.2f}) "
+              f"decode_workers={s['decode_workers']} "
+              f"(util {s['decode_util']:.2f})  "
+              f"handoffs={s['handoffs']} "
+              f"handoff p50={s['handoff_p50_s'] * 1e3:.2f}ms "
+              f"p95={s['handoff_p95_s'] * 1e3:.2f}ms  "
+              f"queue_depth peak={s['queue_depth_peak']} "
+              f"mean={s['queue_depth_mean']:.1f}")
     if s.get("prefix_lookups") is not None:
         print(f"  prefix hit_rate={s['prefix_hit_rate']:.2f} "
               f"({s['prefix_hits']}/{s['prefix_lookups']}) "

@@ -9,6 +9,7 @@ prefill/decode steps, and :class:`ServeReport` carries the measured
 TTFT / per-token latency / goodput / slot-occupancy / page-pool metrics
 out to the benchmarks.
 """
+from repro.serving.disagg import DisaggregatedEngine
 from repro.serving.engine import (SCHEDULERS, ContinuousEngine,
                                   RequestQueue, StaticEngine,
                                   decode_lockstep, make_engine)
@@ -21,6 +22,8 @@ from repro.serving.pages import (PageAllocator, PoolInvariantError,
 from repro.serving.prefix import RadixCache
 from repro.serving.request import (OUTCOMES, Request, RequestMetrics,
                                    ServeReport, SimClock, WallClock)
+from repro.serving.roles import (DecodeWorker, PageHandoff, PrefillWorker,
+                                 Scheduler, prefill_owner)
 
 __all__ = [
     "FAULT_KINDS",
@@ -31,15 +34,21 @@ __all__ = [
     "OUTCOMES",
     "SCHEDULERS",
     "ContinuousEngine",
+    "DecodeWorker",
+    "DisaggregatedEngine",
     "PagedEngine",
     "PageAllocator",
+    "PageHandoff",
     "PoolInvariantError",
+    "PrefillWorker",
     "RadixCache",
     "RequestQueue",
+    "Scheduler",
     "StaticEngine",
     "decode_lockstep",
     "make_engine",
     "pages_needed",
+    "prefill_owner",
     "resolve_fault_plan",
     "Request",
     "RequestMetrics",

@@ -40,49 +40,10 @@ import jax.numpy as jnp
 
 from repro.serving.request import (Request, RequestMetrics, ServeReport,
                                    WallClock)
-
-
-class RequestQueue:
-    """Arrival-aware priority queue the continuous/paged schedulers admit
-    from. Among *arrived* requests the highest ``priority`` wins; ties
-    break by earliest arrival then lowest rid — so an all-default-priority
-    workload admits in exactly the old FIFO order. Requeues (preemption,
-    fault retry) :meth:`push` back with a fresh arrival time."""
-
-    def __init__(self, requests: Sequence[Request] = ()) -> None:
-        self._items: List[Request] = list(requests)
-
-    def __len__(self) -> int:
-        return len(self._items)
-
-    def __bool__(self) -> bool:
-        return bool(self._items)
-
-    def push(self, req: Request) -> None:
-        self._items.append(req)
-
-    def remove(self, req: Request) -> None:
-        self._items.remove(req)
-
-    def next_arrival(self) -> float:
-        return min(r.arrival_s for r in self._items)
-
-    def peek_best(self, now_rel: float) -> Optional[Request]:
-        """Highest-priority request that has arrived by ``now_rel``."""
-        ready = [r for r in self._items if r.arrival_s <= now_rel]
-        if not ready:
-            return None
-        return min(ready, key=lambda r: (-r.priority, r.arrival_s, r.rid))
-
-    def pop_expired(self, now_rel: float) -> List[Request]:
-        """Remove and return queued requests already past their deadline —
-        admitting them would burn prefill on work that cannot meet its
-        SLO, so the reaper retires them straight from the queue."""
-        dead = [r for r in self._items
-                if r.deadline_abs_s is not None and now_rel > r.deadline_abs_s]
-        for r in dead:
-            self._items.remove(r)
-        return dead
+# RequestQueue lives with the other scheduling roles now; re-exported here
+# because it predates the role split and callers import it from this module
+from repro.serving.roles import (PrefillWorker, RequestQueue,  # noqa: F401
+                                 Scheduler)
 
 
 def _default_prompt_to_batch(prompts: np.ndarray) -> dict:
@@ -259,15 +220,19 @@ class StaticEngine(_EngineBase):
 
     SLO semantics: lockstep batches cannot free a row mid-flight, so
     priorities are ignored (arrival-order batching — the baseline the
-    preempting schedulers are measured against) and deadlines are
-    enforced *post hoc*: a request whose batch finished past its deadline
-    is marked ``timed_out`` (its tokens were generated but missed the
-    SLO, so it does not count toward goodput)."""
+    preempting schedulers are measured against) and deadline misses are
+    detected after the batch drains — but credited by the same
+    :meth:`Scheduler.deadline_truncate` rule the per-step reapers use:
+    only tokens whose decode step finished by the deadline count as
+    generated (the lane kept lockstepping past it, but that work is
+    wasted, not goodput), so an expired request no longer over-counts
+    ``new_tokens`` relative to the continuous/paged engines."""
 
     scheduler = "static"
 
     def run(self, requests: Sequence[Request]) -> ServeReport:
-        reqs, rejected = self._validate(requests)
+        sched = Scheduler(self)
+        reqs, rejected = sched.validate(requests)
         B = self.slots
         clock = self.clock
         t0 = clock.now()
@@ -316,12 +281,13 @@ class StaticEngine(_EngineBase):
                         n = int(hits[0]) + 1
                 m = metrics[r.rid]
                 m.admitted_s, m.first_token_s = t_adm, t_first
+                n, finish, timed_out = Scheduler.deadline_truncate(
+                    t_first, times[:n - 1], r.deadline_abs_s)
                 m.slot, m.new_tokens, m.tokens = i, n, own[:n]
                 m.token_latencies_s = list(times[:n - 1])
-                m.finish_s = t_first + float(np.sum(times[:n - 1]))
-                d = r.deadline_abs_s
-                if d is not None and m.finish_s > d:
-                    m.outcome = "timed_out"   # generated, but missed SLO
+                m.finish_s = finish
+                if timed_out:
+                    m.outcome = "timed_out"   # credited only to the SLO
                 else:
                     m.finished = True
                     m.outcome = "completed"
@@ -402,7 +368,9 @@ class ContinuousEngine(_EngineBase):
                        donate_argnums=(0, 1) if self._donate_ok else ())
 
     def run(self, requests: Sequence[Request]) -> ServeReport:
-        reqs, rejected = self._validate(requests)
+        sched = Scheduler(self)
+        reqs, rejected = sched.validate(requests)
+        pw = PrefillWorker(self)
         B = self.slots
         clock = self.clock
         t0 = clock.now()
@@ -424,50 +392,44 @@ class ContinuousEngine(_EngineBase):
             "tokbuf": jnp.zeros((B, T), jnp.int32),
         }
         metrics = self._make_metrics(reqs, rejected)
-        req_of = {r.rid: r for r in reqs}
-        queue = RequestQueue(reqs)
         slot_rid: List[Optional[int]] = [None] * B
         active_host = np.zeros(B, bool)
         slot_tokens = np.zeros(B, np.int64)
         decode_steps = prefills = peak_conc = 0
-        has_deadlines = any(r.deadline_s is not None for r in reqs)
 
-        while queue or active_host.any():
-            # ---- deadline reaper: queued then active requests past SLO
-            if has_deadlines:
-                now_rel = clock.now() - t0
-                for r in queue.pop_expired(now_rel):
-                    metrics[r.rid].outcome = "timed_out"
-                doomed = [int(s) for s in np.flatnonzero(active_host)
-                          if (d := req_of[slot_rid[s]].deadline_abs_s)
-                          is not None and now_rel > d]
-                if doomed:
-                    ncounts = np.asarray(state["ncount"])
-                    for s in doomed:
-                        m = metrics[slot_rid[s]]
-                        m.outcome = "timed_out"
-                        m.new_tokens = int(ncounts[s])
-                        m.finish_s = now_rel
-                        m.tokens = np.asarray(
-                            state["tokbuf"][s, :m.new_tokens])
-                        slot_rid[s] = None
-                        active_host[s] = False
-                    # retire the lanes on device too, so the pool step
-                    # stops advancing (and charging for) the dead rows
-                    keep = jnp.asarray(active_host)
-                    state["active"] = state["active"] & keep
+        while sched.queue or active_host.any():
+            # ---- Scheduler role: reap queued then active requests past SLO
+            now_rel = clock.now() - t0
+            for r in sched.reap_queued(now_rel):
+                metrics[r.rid].outcome = "timed_out"
+            doomed = sched.doomed_slots(now_rel, slot_rid, active_host)
+            if doomed:
+                ncounts = np.asarray(state["ncount"])
+                for s in doomed:
+                    m = metrics[slot_rid[s]]
+                    m.outcome = "timed_out"
+                    m.new_tokens = int(ncounts[s])
+                    m.finish_s = now_rel
+                    m.tokens = np.asarray(
+                        state["tokbuf"][s, :m.new_tokens])
+                    slot_rid[s] = None
+                    active_host[s] = False
+                # retire the lanes on device too, so the pool step
+                # stops advancing (and charging for) the dead rows
+                keep = jnp.asarray(active_host)
+                state["active"] = state["active"] & keep
             # ---- admission: free slot + arrived request -> prefill into it
-            while queue and not active_host.all():
-                req = queue.peek_best(clock.now() - t0)
+            while sched.queue and not active_host.all():
+                req = sched.peek_best(clock.now() - t0)
                 if req is None:
                     break
-                queue.remove(req)
+                sched.take(req)
                 slot = int(np.flatnonzero(~active_host)[0])
                 m = metrics[req.rid]
                 m.admitted_s = clock.now() - t0
                 m.slot = slot
                 key, sub = jax.random.split(key)
-                tok0, one = self._prefill_one_batch(
+                tok0, one = pw.prefill_batch(
                     np.asarray(req.prompt, np.int32)[None, :], sub)
                 prefills += 1
                 # the admitted request holds its slot's KV from here even
@@ -494,8 +456,8 @@ class ContinuousEngine(_EngineBase):
                     active_host[slot] = True
                     slot_rid[slot] = req.rid
             if not active_host.any():
-                if queue:          # pool idle until the next arrival
-                    clock.wait_until(t0 + queue.next_arrival())
+                if sched.queue:    # pool idle until the next arrival
+                    clock.wait_until(t0 + sched.next_arrival())
                     continue
                 break
             # ---- one decode step over the whole pool
@@ -535,8 +497,9 @@ SCHEDULERS = {"static": StaticEngine, "continuous": ContinuousEngine}
 def make_engine(scheduler: str, prefill_fn, decode_fn, params, cache_init,
                 **kw) -> _EngineBase:
     if scheduler not in SCHEDULERS:
-        # the paged engine registers itself on import (kept out of this
-        # module to avoid a circular import with repro.serving.paged)
+        # the paged + disaggregated engines register themselves on import
+        # (kept out of this module to avoid circular imports)
+        import repro.serving.disagg  # noqa: F401
         import repro.serving.paged  # noqa: F401
     try:
         cls = SCHEDULERS[scheduler]

@@ -165,11 +165,15 @@ class FaultInjector:
         return [e for e in self.events if e["recovered_step"] is None]
 
     # ------------------------------------------------------- step boundary
-    def begin_step(self, step: int, alloc: PageAllocator, clock) -> None:
+    def begin_step(self, step: int, alloc: PageAllocator, clock,
+                   role: str = "engine") -> None:
         """Apply every fault scheduled at ``step`` (idempotent per step).
         The engine calls this once per scheduler loop iteration, then
         runs ``alloc.check()`` — poison faults are *meant* to make that
-        check raise, see :meth:`heal`."""
+        check raise, see :meth:`heal`. ``role`` names which serving role
+        drove the step ("prefill"/"decode" under the disaggregated
+        engine, "engine" for the interleaved loops) and is recorded on
+        every fault event fired this step."""
         if step <= self._last_step:
             return
         self._last_step = step
@@ -182,7 +186,8 @@ class FaultInjector:
             if i in self._fired or f.step != step:
                 continue
             self._fired.add(i)
-            ev = {"step": step, "kind": f.kind, "recovered_step": None}
+            ev = {"step": step, "kind": f.kind, "role": role,
+                  "recovered_step": None}
             self.events.append(ev)
             if f.kind == "alloc_refusal":
                 self._refusals_left += f.count

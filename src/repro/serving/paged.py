@@ -58,13 +58,14 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.serving.engine import (RequestQueue, SCHEDULERS, _EngineBase,
-                                  _sample_tokens)
+from repro.serving.engine import SCHEDULERS, _EngineBase, _sample_tokens
 from repro.serving.faults import FaultInjector, FaultPlan, InjectedFault
 from repro.serving.pages import (PageAllocator, PoolInvariantError, PoolStats,
                                  pages_needed)
 from repro.serving.prefix import RadixCache
 from repro.serving.request import Request, ServeReport
+from repro.serving.roles import (DecodeWorker, PageHandoff, PrefillWorker,
+                                 Scheduler)
 
 
 class PagedEngine(_EngineBase):
@@ -248,12 +249,15 @@ class PagedEngine(_EngineBase):
 
     # --------------------------------------------------------- admission
     def _reserve_pages(self, req: Request, alloc: PageAllocator,
-                      radix: Optional[RadixCache]):
+                      radix: Optional[RadixCache], owner=None):
         """Try to reserve pages for ``req``, reusing the longest cached
         prefix when the radix cache is on. Returns
         ``(pages, suffix_start)`` or ``None`` when the pool (even after
         LRU eviction) cannot cover the fresh remainder — the caller
-        blocks the queue head until a retirement frees pages.
+        blocks the queue head until a retirement frees pages. ``owner``
+        is the allocator key the reservation is held under (default: the
+        rid; the prefill role reserves under its own key and hands off —
+        see :class:`repro.serving.roles.PageHandoff`).
 
         The suffix start is capped at ``prompt_len - 1``: at least one
         prompt token must be re-prefilled to produce the first-token
@@ -261,11 +265,12 @@ class PagedEngine(_EngineBase):
         so the final matched page is attached *copy-on-write* — its K/V
         is duplicated into a fresh page before the one-token prefill
         writes into it — and every fully-matched page stays read-only."""
+        owner = req.rid if owner is None else owner
         total_tokens = req.prompt_len + req.max_new_tokens
         if radix is None:
             if not alloc.can_fit(total_tokens):
                 return None
-            return alloc.allocate(req.rid, total_tokens), 0
+            return alloc.allocate(owner, total_tokens), 0
         match_pages, match_tok = radix.lookup(np.asarray(req.prompt))
         s0 = min(match_tok, req.prompt_len - 1)
         k_full = s0 // self.page_size
@@ -277,7 +282,7 @@ class PagedEngine(_EngineBase):
                         protect=frozenset(match_pages))
         if need_fresh > alloc.num_free:
             return None
-        pages = alloc.allocate(req.rid, total_tokens, shared=shared)
+        pages = alloc.allocate(owner, total_tokens, shared=shared)
         if cow_src is not None:
             self._caches = self._jit_copy(self._caches, jnp.int32(cow_src),
                                           jnp.int32(pages[k_full]))
@@ -285,45 +290,38 @@ class PagedEngine(_EngineBase):
 
     # -------------------------------------------------------------- run
     def run(self, requests: Sequence[Request]) -> ServeReport:
-        reqs, rejected = self._validate(requests)
+        # role composition (interleaved): one Scheduler, one PrefillWorker
+        # and one DecodeWorker over all lanes, sharing this engine's clock
+        # — same schedule as the old monolithic loop (parity-gated), with
+        # the page handoff made explicit between the two roles
+        sched = Scheduler(self)
+        reqs, rejected = sched.validate(requests)
         B = self.slots
         clock = self.clock
         t0 = clock.now()
         key = jax.random.PRNGKey(self.seed)
-        T = self.cache_span
         self._caches = self.cache_init(self.num_pages, self.page_size)
         alloc = PageAllocator(self.num_pages, self.page_size)
         radix = RadixCache(alloc) if self.prefix_cache else None
         inj = FaultInjector(self.fault_plan) if self.fault_plan else None
         stats = PoolStats()
-        state = {
-            "tok": jnp.zeros((B, 1), jnp.int32),
-            "pos": jnp.zeros((B,), jnp.int32),
-            "active": jnp.zeros((B,), bool),
-            "ncount": jnp.zeros((B,), jnp.int32),
-            "budget": jnp.ones((B,), jnp.int32),
-            "tokbuf": jnp.zeros((B, T), jnp.int32),
-            "btab": jnp.zeros((B, self.npag_max), jnp.int32),
-        }
+        pw = PrefillWorker(self)
+        dw = DecodeWorker(self, B, npag_max=self.npag_max)
+        handoff = PageHandoff(alloc, self._release_pages, self.page_size)
         metrics = self._make_metrics(reqs, rejected)
-        # req_of/plen_of track the *current* incarnation of each request
-        # (a requeue replaces the entry with the extended-prompt version)
-        req_of = {r.rid: r for r in reqs}
+        # plen_of tracks the *current* incarnation of each request (a
+        # requeue replaces the entry with the extended-prompt version;
+        # the Request itself lives in sched.req_of)
         plen_of = {r.rid: r.prompt_len for r in reqs}
         prompt_of: Dict[int, np.ndarray] = {}
         # tokens a preempted/faulted request generated before eviction —
         # its terminal metrics report the cumulative stream
         partial: Dict[int, np.ndarray] = {}
-        queue = RequestQueue(reqs)
-        slot_rid: List[Optional[int]] = [None] * B
-        admit_seq = [0] * B              # admission order, for victim choice
         admissions = 0
-        active_host = np.zeros(B, bool)
-        slot_tokens = np.zeros(B, np.int64)
         decode_steps = prefills = peak_conc = blocked = 0
         lookups = hits = tokens_saved = 0
         preempt_events = requeues = 0
-        has_deadlines = any(r.deadline_s is not None for r in reqs)
+        qd_samples: List[int] = []
         step = -1                        # engine step (admission or decode)
 
         def audit() -> None:
@@ -364,7 +362,7 @@ class PagedEngine(_EngineBase):
             cache when enabled). After ``max_retries`` requeues the
             request goes terminal instead."""
             nonlocal requeues
-            r = req_of[rid]
+            r = sched.req_of[rid]
             m = metrics[rid]
             cum = cumulative(rid, gen)
             m.retries += 1
@@ -388,106 +386,100 @@ class PagedEngine(_EngineBase):
                 deadline_s=(None if r.deadline_abs_s is None
                             else r.deadline_abs_s - arrival),
                 priority=r.priority, max_retries=r.max_retries)
-            req_of[rid] = nr
             plen_of[rid] = nr.prompt_len
-            queue.push(nr)
+            sched.requeue(nr)
             requeues += 1
 
         def evict_lane(s: int, ncounts: np.ndarray) -> np.ndarray:
             """Take lane ``s`` out of service mid-flight: index its pages
             into the radix cache (so a requeue re-prefills warm), free
             them, null the device row. Returns the generated tokens."""
-            rid = slot_rid[s]
+            rid = dw.slot_rid[s]
             n = int(ncounts[s])
-            gen = np.asarray(state["tokbuf"][s, :n])
+            gen = np.asarray(dw.state["tokbuf"][s, :n])
             if radix is not None:
                 index_sequence(rid, gen)
             self._release_pages(alloc, rid)
-            slot_rid[s] = None
-            active_host[s] = False
+            dw.slot_rid[s] = None
+            dw.active_host[s] = False
             return gen
 
         def try_preempt(for_req: Request) -> bool:
-            """Evict the lowest-priority active request (ties: latest
-            admitted — least sunk prefill) iff it is strictly lower
-            priority than ``for_req``; the victim is requeued with its
-            progress as prompt extension."""
+            """Evict the Scheduler's victim choice (lowest priority;
+            ties: latest admitted — least sunk prefill), requeued with
+            its progress as prompt extension. False = nobody active is
+            strictly lower priority than ``for_req``."""
             nonlocal preempt_events
-            cands = [s for s in range(B) if active_host[s]]
-            if not cands:
+            victim = sched.pick_victim(for_req, dw.slot_rid,
+                                       dw.active_host, dw.admit_seq)
+            if victim is None:
                 return False
-            victim = min(cands, key=lambda s: (
-                req_of[slot_rid[s]].priority, -admit_seq[s]))
-            if req_of[slot_rid[victim]].priority >= for_req.priority:
-                return False
-            ncounts = np.asarray(state["ncount"])
-            rid = slot_rid[victim]
+            ncounts = np.asarray(dw.state["ncount"])
+            rid = dw.slot_rid[victim]
             gen = evict_lane(victim, ncounts)
-            state_new = self._jit_evict(state, victim)
-            state.update(state_new)
+            dw.evict(victim)
             metrics[rid].preemptions += 1
             preempt_events += 1
             requeue_or_fail(rid, gen, clock.now() - t0, "preempted")
             audit()
             return True
 
-        while queue or active_host.any():
+        while sched.queue or dw.active_host.any():
             step += 1
+            qd_samples.append(sched.queue_depth())
             if inj is not None:
                 inj.begin_step(step, alloc, clock)
                 audit()
-            # ---- deadline reaper: queued then active requests past SLO
-            if has_deadlines:
-                now_rel = clock.now() - t0
-                for r in queue.pop_expired(now_rel):
-                    m = metrics[r.rid]
+            # ---- Scheduler role: reap queued then active requests past SLO
+            now_rel = clock.now() - t0
+            for r in sched.reap_queued(now_rel):
+                m = metrics[r.rid]
+                m.outcome = "timed_out"
+                cum = cumulative(r.rid, np.zeros(0, np.int32))
+                if len(cum):          # progress from before eviction
+                    m.new_tokens = len(cum)
+                    m.tokens = cum
+                    m.finish_s = now_rel
+            doomed = sched.doomed_slots(now_rel, dw.slot_rid, dw.active_host)
+            if doomed:
+                ncounts = np.asarray(dw.state["ncount"])
+                for s in doomed:
+                    rid = dw.slot_rid[s]
+                    m = metrics[rid]
+                    gen = evict_lane(s, ncounts)
+                    dw.evict(s)
+                    cum = cumulative(rid, gen)
                     m.outcome = "timed_out"
-                    cum = cumulative(r.rid, np.zeros(0, np.int32))
-                    if len(cum):          # progress from before eviction
-                        m.new_tokens = len(cum)
-                        m.tokens = cum
-                        m.finish_s = now_rel
-                doomed = [int(s) for s in np.flatnonzero(active_host)
-                          if (d := req_of[slot_rid[s]].deadline_abs_s)
-                          is not None and now_rel > d]
-                if doomed:
-                    ncounts = np.asarray(state["ncount"])
-                    for s in doomed:
-                        rid = slot_rid[s]
-                        m = metrics[rid]
-                        gen = evict_lane(s, ncounts)
-                        state = self._jit_evict(state, s)
-                        cum = cumulative(rid, gen)
-                        m.outcome = "timed_out"
-                        m.new_tokens = len(cum)
-                        m.tokens = cum
-                        m.finish_s = now_rel
-                    audit()
+                    m.new_tokens = len(cum)
+                    m.tokens = cum
+                    m.finish_s = now_rel
+                audit()
             # ---- admission: lane + arrived request + enough pages; a
             # higher-priority arrival may preempt to make room for both
-            while queue:
+            while sched.queue:
                 now_rel = clock.now() - t0
-                req = queue.peek_best(now_rel)
+                req = sched.peek_best(now_rel)
                 if req is None:
                     break
-                if active_host.all() and not try_preempt(req):
+                if dw.active_host.all() and not try_preempt(req):
                     break
                 if inj is not None and inj.refuse_alloc():
                     blocked += 1     # transient injected refusal: retry
                     break            # next engine step
-                got = self._reserve_pages(req, alloc, radix)
+                # PrefillWorker role: reserve under the prefill owner key
+                got = pw.reserve(req, alloc, radix)
                 if radix is not None:
                     lookups += 1
                 while got is None and try_preempt(req):
-                    got = self._reserve_pages(req, alloc, radix)
+                    got = pw.reserve(req, alloc, radix)
                 if got is None:
                     blocked += 1     # queue head waits for retirements
                     break
                 pages, s0 = got
-                queue.remove(req)
+                sched.take(req)
                 prompt_np = np.asarray(req.prompt, np.int32)
                 prompt_of[req.rid] = prompt_np
-                slot = int(np.flatnonzero(~active_host)[0])
+                slot = dw.free_lane()
                 m = metrics[req.rid]
                 base = len(partial.get(req.rid, ()))
                 m.admitted_s = clock.now() - t0
@@ -503,13 +495,13 @@ class PagedEngine(_EngineBase):
                 try:
                     if inj is not None:
                         inj.check_prefill()
-                    logits, chunks = self._chunked_prefill(
+                    logits, chunks = pw.prefill(
                         prompt_np, btab_dev, clock, start=s0)
                 except InjectedFault:
                     # contain the fault to this request: give back its
                     # pages (un-prefilled — check_prefill fires before
                     # any chunk writes) and retry or fail it alone
-                    self._release_pages(alloc, req.rid)
+                    handoff.abort(req.rid)
                     audit()
                     requeue_or_fail(req.rid, np.zeros(0, np.int32),
                                     clock.now() - t0, "failed")
@@ -526,12 +518,17 @@ class PagedEngine(_EngineBase):
                 done0 = req.max_new_tokens == 1
                 if self.eos_id is not None:
                     done0 = done0 or int(tok0[0, 0]) == self.eos_id
-                state = self._admit(state, tok0, btab_dev[0], slot,
-                                    req.prompt_len, req.max_new_tokens,
-                                    not done0)
-                slot_tokens[slot] += 1
+                # PageHandoff role: decode takes ownership of the pages.
+                # Interleaved, the lane picks the request up in the same
+                # engine step, so handoff latency is zero by construction
+                # (the disaggregated engine measures the real queue-wait)
+                handoff.transfer(req.rid)
+                handoff.latencies_s.append(0.0)
+                dw.admit(tok0, btab_dev[0], slot, req.prompt_len,
+                         req.max_new_tokens, not done0)
+                dw.slot_tokens[slot] += 1
                 admissions += 1
-                admit_seq[slot] = admissions
+                dw.admit_seq[slot] = admissions
                 if inj is not None:
                     inj.note_admission(step)
                 if done0:
@@ -543,56 +540,54 @@ class PagedEngine(_EngineBase):
                     self._release_pages(alloc, req.rid)
                     audit()
                 else:
-                    active_host[slot] = True
-                    slot_rid[slot] = req.rid
-            if not active_host.any():
-                if queue:
+                    dw.active_host[slot] = True
+                    dw.slot_rid[slot] = req.rid
+            if not dw.active_host.any():
+                if sched.queue:
                     # pool idle until the next arrival; when admission is
                     # blocked by an injected fault instead, fall through —
                     # the engine-step counter keeps advancing so timed
                     # faults (pressure windows, refusals) can drain
-                    clock.wait_until(t0 + queue.next_arrival())
+                    clock.wait_until(t0 + sched.next_arrival())
                     continue
                 break
-            # ---- one decode step over all lanes
+            # ---- DecodeWorker role: one fused step over all lanes
             t_step = clock.now()
+            dw.note_step_start(t_step - t0)
             key, sub = jax.random.split(key)
-            self._caches, state = self._pool_step(self.params, self._caches,
-                                                  state, sub)
-            jax.block_until_ready(state["active"])
-            clock.charge("decode")
+            new_active, ncounts = dw.step(sub)
             dur = clock.now() - t_step
+            dw.busy_s += dur
             decode_steps += 1
-            new_active = np.asarray(state["active"])
-            ncounts = np.asarray(state["ncount"])
-            for s in np.flatnonzero(active_host):
-                rid = slot_rid[s]
+            for s in np.flatnonzero(dw.active_host):
+                rid = dw.slot_rid[s]
                 m = metrics[rid]
                 base = len(partial.get(rid, ()))
                 m.token_latencies_s.append(dur)
                 m.new_tokens = base + int(ncounts[s])
-                slot_tokens[s] += 1
+                dw.slot_tokens[s] += 1
                 if not new_active[s]:         # EOS or budget: free pages
                     m.finished = True
                     m.outcome = "completed"
                     m.finish_s = clock.now() - t0
-                    gen = np.asarray(state["tokbuf"][s, :int(ncounts[s])])
+                    gen = np.asarray(dw.state["tokbuf"][s, :int(ncounts[s])])
                     m.tokens = cumulative(rid, gen)
                     if radix is not None:
                         index_sequence(rid, gen)
                     self._release_pages(alloc, rid)
                     audit()
-                    slot_rid[s] = None
-            active_host = new_active.copy() & active_host
-            live = sum(plen_of[slot_rid[s]] + int(ncounts[s])
-                       for s in np.flatnonzero(active_host))
+                    dw.slot_rid[s] = None
+            dw.active_host = new_active.copy() & dw.active_host
+            dw.note_step_end(clock.now() - t0)
+            live = sum(plen_of[dw.slot_rid[s]] + int(ncounts[s])
+                       for s in np.flatnonzero(dw.active_host))
             stats.sample(alloc, live)
         self._caches = None          # free the pool between runs
         return ServeReport(
             metrics=[metrics[r.rid] for r in (*reqs, *rejected)],
             scheduler=self.scheduler, slots=B,
             makespan_s=clock.now() - t0, decode_steps=decode_steps,
-            prefills=prefills, slot_tokens=slot_tokens,
+            prefills=prefills, slot_tokens=dw.slot_tokens,
             peak_concurrency=peak_conc, page_size=self.page_size,
             num_pages=self.num_pages,
             page_occupancy_mean=stats.occupancy_mean,
@@ -611,7 +606,13 @@ class PagedEngine(_EngineBase):
             pages_leaked=alloc.owned_pages,
             faults_injected=inj.injected if inj else 0,
             fault_recoveries=inj.recoveries if inj else 0,
-            fault_recovery_steps=inj.recovery_steps() if inj else [])
+            fault_recovery_steps=inj.recovery_steps() if inj else [],
+            handoffs=handoff.handoffs,
+            handoff_latencies_s=list(handoff.latencies_s),
+            queue_depth_peak=max(qd_samples, default=0),
+            queue_depth_mean=(float(sum(qd_samples) / len(qd_samples))
+                              if qd_samples else 0.0),
+            decode_stalls_s=list(dw.stalls_s))
 
 
 SCHEDULERS["paged"] = PagedEngine

@@ -42,7 +42,7 @@ from __future__ import annotations
 
 import os
 from dataclasses import dataclass, field
-from typing import Dict, List, Sequence
+from typing import Dict, Hashable, List, Sequence
 
 NULL_PAGE = 0
 
@@ -88,7 +88,10 @@ class PageAllocator:
                 f"reserving {self.reserved}")
         self._free: List[int] = list(
             range(self.num_pages - 1, self.reserved - 1, -1))
-        self._owned: Dict[int, List[int]] = {}      # owner -> page ids
+        # owner -> page ids; owners are any hashable key — plain rids for
+        # decode-side holds, ("prefill", rid) tuples for the prefill
+        # role's pre-handoff reservations (see repro.serving.roles)
+        self._owned: Dict[Hashable, List[int]] = {}
         self._refs: Dict[int, int] = {}             # page id -> refcount
         self.high_water = 0                         # peak pages in use
         self.failed_allocs = 0
@@ -166,7 +169,7 @@ class PageAllocator:
         return logical - len(distinct)
 
     # -------------------------------------------------------- allocation
-    def allocate(self, owner: int, tokens: int,
+    def allocate(self, owner: Hashable, tokens: int,
                  shared: Sequence[int] = ()) -> List[int]:
         """Reserve pages for ``tokens`` KV entries under ``owner`` (a
         request id). ``shared`` pages (a page-aligned cached prefix, in
@@ -238,7 +241,7 @@ class PageAllocator:
             self.check()     # free()/retire routes through here too
         return freed
 
-    def free(self, owner: int) -> List[int]:
+    def free(self, owner: Hashable) -> List[int]:
         """Retire ``owner``: drop its reference on every page it holds.
         Only pages whose refcount reaches zero go back to the free list
         (shared prefix pages survive while the cache or another request
@@ -250,8 +253,13 @@ class PageAllocator:
                              "(double free?)") from None
         return self.release(pages)
 
-    def owned(self, owner: int) -> List[int]:
+    def owned(self, owner: Hashable) -> List[int]:
         return list(self._owned.get(owner, ()))
+
+    def holds(self, owner: Hashable) -> bool:
+        """Whether ``owner`` currently holds any pages — the dual-role
+        ownership probe the P/D handoff invariants assert on."""
+        return owner in self._owned
 
     def check(self) -> None:
         """Invariant check: every usable page is either on the free list

@@ -89,6 +89,10 @@ class RequestMetrics:
     # tokens (token 0 comes from prefill and is covered by TTFT)
     token_latencies_s: List[float] = field(default_factory=list)
     tokens: Optional[np.ndarray] = None   # (new_tokens,) generated ids
+    # ---- role attribution (disaggregated engines; -1 = interleaved) ----
+    prefill_worker: int = -1        # which prefill worker ran the prompt
+    decode_worker: int = -1         # which decode pool generated tokens
+    handoff_latency_s: float = 0.0  # prefill-done -> decode-lane pickup
 
     @property
     def queue_s(self) -> float:
@@ -126,9 +130,11 @@ class SimClock:
     the schedule (admissions, step counts), never on host jitter."""
 
     def __init__(self, prefill_cost_s: float = 10.0,
-                 decode_cost_s: float = 1.0) -> None:
+                 decode_cost_s: float = 1.0,
+                 handoff_cost_s: float = 0.0) -> None:
         self._t = 0.0
-        self._cost = {"prefill": prefill_cost_s, "decode": decode_cost_s}
+        self._cost = {"prefill": prefill_cost_s, "decode": decode_cost_s,
+                      "handoff": handoff_cost_s}
 
     def now(self) -> float:
         return self._t
@@ -181,6 +187,21 @@ class ServeReport:
     # decode steps from each fault's injection to its recovery (the
     # chaos_soak scenario's recovery-latency metric)
     fault_recovery_steps: List[int] = field(default_factory=list)
+    # ---- P/D role split (zero/empty unless scheduler=="disaggregated",
+    # except decode_stalls_s, which the interleaved paged engine also
+    # fills: gaps between consecutive decode steps while lanes stayed
+    # active — the prefill-interference metric disaggregation removes)
+    prefill_workers: int = 0
+    decode_workers: int = 0
+    prefill_busy_s: float = 0.0        # summed over prefill workers
+    decode_busy_s: float = 0.0         # summed over decode workers
+    prefill_util: float = 0.0          # busy / (workers * makespan)
+    decode_util: float = 0.0
+    handoffs: int = 0                  # prefill->decode page transfers
+    handoff_latencies_s: List[float] = field(default_factory=list)
+    queue_depth_peak: int = 0          # pending requests, per-step samples
+    queue_depth_mean: float = 0.0
+    decode_stalls_s: List[float] = field(default_factory=list)
 
     @property
     def completed(self) -> int:
@@ -313,5 +334,24 @@ class ServeReport:
                 "prefix_evictions": self.prefix_evictions,
                 "ttft_warm_p50_s": pct(warm, 50.0),
                 "ttft_cold_p50_s": pct(cold, 50.0),
+            })
+        if self.decode_stalls_s:
+            ds = sorted(self.decode_stalls_s)
+            out.update({
+                "decode_stall_p50_s": pct(ds, 50.0),
+                "decode_stall_p95_s": pct(ds, 95.0),
+            })
+        if self.prefill_workers:
+            hl = sorted(self.handoff_latencies_s)
+            out.update({
+                "prefill_workers": self.prefill_workers,
+                "decode_workers": self.decode_workers,
+                "prefill_util": self.prefill_util,
+                "decode_util": self.decode_util,
+                "handoffs": self.handoffs,
+                "handoff_p50_s": pct(hl, 50.0),
+                "handoff_p95_s": pct(hl, 95.0),
+                "queue_depth_peak": self.queue_depth_peak,
+                "queue_depth_mean": self.queue_depth_mean,
             })
         return out

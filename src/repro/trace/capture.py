@@ -360,7 +360,7 @@ class TracingClock:
     def now(self) -> float:
         return self.inner.now()
 
-    def charge(self, kind: str, n: int = 1) -> None:
+    def charge(self, kind: str, n: int = 1, role: Optional[str] = None) -> None:
         self.inner.charge(kind, n)
         t1 = self.inner.now()
         cost = max(t1 - self._mark, 0.0)
@@ -372,7 +372,7 @@ class TracingClock:
                 kind,
                 cost,
                 deps=(self._prev,) if self._prev else (),
-                meta={"n": n},
+                meta={"n": n, "role": role or kind},
             )
         )
         self._mark = t1

@@ -26,7 +26,8 @@ from repro.bench.record import env_fingerprint
 TRACE_SCHEMA_VERSION = 1
 
 # event categories the replayer understands as parallel lanes
-KINDS = ("compute", "memory", "collective", "prefill", "decode", "host")
+KINDS = ("compute", "memory", "collective", "prefill", "decode",
+         "handoff", "host")
 
 
 class TraceError(ValueError):
@@ -110,11 +111,19 @@ class Trace:
                     )
 
     # ------------------------------------------------------------- lanes
-    def lane_seconds(self) -> Dict[str, float]:
-        """Total event cost per lane (kind) — the decomposed step."""
+    def lane_seconds(self, by: str = "kind") -> Dict[str, float]:
+        """Total event cost per lane (kind) — the decomposed step.
+
+        ``by="role"`` groups serve events by the serving role that
+        issued them instead (``ev.meta["role"]``, falling back to the
+        kind): under the disaggregated engine the same event kinds land
+        on per-role lanes, which is what the interference comparison in
+        ``benchmarks/bench_trace.py`` sums.
+        """
         out: Dict[str, float] = {}
         for ev in self.events:
-            out[ev.kind] = out.get(ev.kind, 0.0) + ev.cost_s
+            key = ev.meta.get("role", ev.kind) if by == "role" else ev.kind
+            out[key] = out.get(key, 0.0) + ev.cost_s
         return out
 
     def calibration(self) -> Dict[str, float]:

@@ -115,13 +115,37 @@ def test_paged_deadline_expires_in_queue():
 
 def test_static_deadline_marked_post_hoc():
     """Lockstep batches cannot evict mid-flight: a missed deadline is
-    detected after the batch drains and excluded from goodput."""
+    detected after the batch drains (via Scheduler.deadline_truncate)
+    and excluded from goodput."""
     eng = StaticEngine(stub_prefill, stub_decode, None, stub_cache_init,
                        slots=2, cache_span=32, clock=SimClock())
     rep = eng.run([_req(0, budget=8, deadline_s=5.0),
                    _req(1, budget=8)])
     out = _outcomes(rep)
     assert out[0] == "timed_out" and out[1] == "completed"
+    assert rep.completed == 1
+
+
+def test_static_deadline_truncates_token_count():
+    """Regression: the static engine used to credit every generated
+    token to an expired request post hoc (new_tokens=8, finish at batch
+    drain), over-counting work past the deadline. The extracted
+    Scheduler.deadline_truncate rule credits only tokens that landed by
+    the deadline, matching the per-step engines' reapers: SimClock puts
+    the first token at t=10 and each decode step at +1s, so a 12s
+    deadline covers exactly 3 tokens and the request finishes AT its
+    deadline, not at batch drain (t=17)."""
+    eng = StaticEngine(stub_prefill, stub_decode, None, stub_cache_init,
+                       slots=2, cache_span=32, clock=SimClock())
+    rep = eng.run([_req(0, budget=8, deadline_s=12.0),
+                   _req(1, budget=8)])
+    m0, m1 = (next(m for m in rep.metrics if m.rid == r) for r in (0, 1))
+    assert m0.outcome == "timed_out"
+    assert m0.new_tokens == 3                 # pre-fix: 8
+    assert m0.finish_s == 12.0                # pre-fix: 17.0 (batch drain)
+    assert len(m0.tokens) == 3
+    assert len(m0.token_latencies_s) == 2
+    assert m1.outcome == "completed" and m1.new_tokens == 8
     assert rep.completed == 1
 
 

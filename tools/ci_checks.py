@@ -11,6 +11,7 @@ workflow file:
     PYTHONPATH=src python tools/ci_checks.py paged-parity
     PYTHONPATH=src python tools/ci_checks.py prefix-parity
     PYTHONPATH=src python tools/ci_checks.py chaos-parity
+    PYTHONPATH=src python tools/ci_checks.py pd-parity
     PYTHONPATH=src python tools/ci_checks.py trace-replay-error
     PYTHONPATH=src python tools/ci_checks.py doc-refs
     PYTHONPATH=src python tools/ci_checks.py inject-slowdown --factor 2
@@ -30,7 +31,12 @@ multi-turn replay, strictly-more admissions, warm TTFT < cold TTFT);
 ``chaos-parity`` runs a deadline/priority burst under the default
 seeded fault plan and asserts every survivor is token-identical to the
 fault-free run with zero leaked pages, then self-tests its own leak
-detector by no-op'ing the engine's page-release seam.
+detector by no-op'ing the engine's page-release seam;
+``pd-parity`` runs the same tiny model through the interleaved paged
+engine and the disaggregated P/D engine and asserts greedy token parity
+on a mixed burst, one page handoff per request reaching decode, and a
+strictly lower decode-step p95 stall under a chunked-prefill-heavy
+staggered workload (doctored self-tests for both gates).
 
 ``trace-replay-error`` gates the trace→DAG→replay cost model: every
 captured scaling-matrix cell's identity replay must land within
@@ -408,6 +414,163 @@ def check_chaos_parity(args: argparse.Namespace) -> int:
         f"{len(survivors)}/{len(want)} survivors token-identical, 0 pages "
         f"leaked; self-test leaked {leaked} pages when release was "
         f"disabled OK"
+    )
+    return 0
+
+
+def _assert_pd_token_parity(toks_paged: dict, toks_disagg: dict) -> None:
+    """Per-request greedy token parity between the interleaved and
+    disaggregated runs; raises AssertionError naming the first
+    divergence (extracted so the doctored self-test can call it)."""
+    assert set(toks_paged) == set(toks_disagg), (
+        f"rid sets differ: {sorted(toks_paged)} vs {sorted(toks_disagg)}"
+    )
+    for rid, want in sorted(toks_paged.items()):
+        assert toks_disagg[rid] == want, (
+            f"request {rid}: disaggregated tokens {toks_disagg[rid]} != "
+            f"interleaved {want}"
+        )
+
+
+def _assert_stall_improvement(p95_disagg: float,
+                              p95_interleaved: float) -> None:
+    """Disaggregation must strictly reduce the decode-step p95 stall —
+    the whole point of splitting the roles (extracted for the
+    self-test)."""
+    assert p95_disagg < p95_interleaved, (
+        f"disaggregated decode-step p95 stall {p95_disagg}s is not "
+        f"strictly below interleaved {p95_interleaved}s"
+    )
+
+
+def check_pd_parity(args: argparse.Namespace) -> int:
+    """The P/D-disaggregation gate, standalone on a tiny model:
+
+    * greedy outputs of the disaggregated engine (separate prefill and
+      decode worker pools over one shared page pool) are token-identical
+      to the interleaved paged engine for every request on a mixed
+      burst — across mixed decode budgets AND mixed prompt lengths
+      (chunked prefill included);
+    * every request that reaches decode does so through exactly one
+      PageHandoff transfer;
+    * under a chunked-prefill-heavy staggered workload the decode-step
+      p95 stall (time a decode lane with live requests spends waiting on
+      the loop's prefill dispatches) is strictly lower disaggregated
+      than interleaved — prefill interference actually left the decode
+      path;
+    * self-test: a doctored token stream MUST trip the parity check, and
+      the interleaved stalls compared against themselves MUST trip the
+      strict-improvement check — proving both gates can fire.
+    """
+    import numpy as np
+
+    from repro.data.pipeline import synth_requests
+    from repro.launch.serve import build_engine
+    from repro.serving import Request, SimClock
+
+    reduce_kw = dict(layers=2, d_model=64, vocab=128, d_ff=128)
+
+    # -- token parity on the mixed burst ------------------------------
+    prompt, budget_max, slots, ps = 8, 24, 4, args.page_size
+
+    def make(scheduler, **kw):
+        return build_engine(
+            "granite-3-8b",
+            batch=slots,
+            prompt_len=prompt,
+            max_new_tokens=budget_max,
+            scheduler=scheduler,
+            page_size=ps,
+            prefill_chunk_tokens=prompt // 2,
+            reduce_kw=reduce_kw,
+            clock=SimClock(),
+            **kw,
+        )
+
+    paged, cfg = make("paged")
+    disagg, _ = make("disaggregated", prefill_workers=2, decode_workers=2)
+    reqs = synth_requests(cfg, 8, prompt, max_new_tokens=(2, budget_max))
+    short = synth_requests(cfg, 4, prompt - 3, max_new_tokens=5, seed=1)
+    for r in short:
+        r.rid += 100
+    reqs = reqs + short
+    rp = paged.run(reqs)
+    rd = disagg.run(reqs)
+    assert rp.completed == rd.completed == len(reqs), (
+        f"incomplete runs: interleaved {rp.completed}, "
+        f"disaggregated {rd.completed}"
+    )
+    toks_p = {m.rid: [int(t) for t in m.tokens] for m in rp.metrics}
+    toks_d = {m.rid: [int(t) for t in m.tokens] for m in rd.metrics}
+    _assert_pd_token_parity(toks_p, toks_d)
+    assert rd.handoffs == len(reqs), (
+        f"{rd.handoffs} handoffs for {len(reqs)} requests reaching "
+        "decode — pages did not change roles exactly once per request"
+    )
+
+    # -- decode interference under a chunked-prefill-heavy stagger ----
+    pl, budget, chunk = 16, 12, 4
+
+    def make_hot(scheduler, **kw):
+        return build_engine(
+            "granite-3-8b",
+            batch=2,
+            prompt_len=pl,
+            max_new_tokens=budget,
+            scheduler=scheduler,
+            page_size=4,
+            prefill_chunk_tokens=chunk,
+            reduce_kw=reduce_kw,
+            clock=SimClock(),
+            **kw,
+        )
+
+    inter, cfg2 = make_hot("paged")
+    dis2, _ = make_hot("disaggregated")
+    rng = np.random.default_rng(5)
+    stagger = [
+        Request(rid=i,
+                prompt=rng.integers(1, cfg2.vocab_size, pl).astype(np.int32),
+                max_new_tokens=budget, arrival_s=45.0 * i)
+        for i in range(8)
+    ]
+    si = inter.run(list(stagger)).summary()
+    sd = dis2.run(list(stagger)).summary()
+    assert si.get("decode_stall_p95_s", 0.0) > 0, (
+        "interleaved run recorded no positive decode-step stalls — the "
+        "workload does not exercise prefill interference"
+    )
+    p95_i = si["decode_stall_p95_s"]
+    p95_d = sd.get("decode_stall_p95_s", 0.0)
+    _assert_stall_improvement(p95_d, p95_i)
+
+    # -- self-tests: both gates must be able to trip ------------------
+    doctored = {rid: list(t) for rid, t in toks_d.items()}
+    victim = sorted(doctored)[0]
+    doctored[victim][-1] ^= 1
+    try:
+        _assert_pd_token_parity(toks_p, doctored)
+    except AssertionError:
+        pass
+    else:
+        raise AssertionError(
+            "self-test: a flipped token passed the parity check — "
+            "pd-parity cannot trip"
+        )
+    try:
+        _assert_stall_improvement(p95_i, p95_i)
+    except AssertionError:
+        pass
+    else:
+        raise AssertionError(
+            "self-test: equal stall p95s passed the strict-improvement "
+            "check — pd-parity cannot trip"
+        )
+    print(
+        f"pd-parity: {len(reqs)} requests token-identical with "
+        f"{rd.handoffs} handoffs; decode-step p95 stall "
+        f"{p95_d:.1f}s (disaggregated) < {p95_i:.1f}s (interleaved); "
+        "self-tests tripped OK"
     )
     return 0
 
@@ -806,6 +969,13 @@ def main(argv: list[str] | None = None) -> int:
     )
     p.add_argument("--seed", type=int, default=0)
     p.set_defaults(fn=check_chaos_parity)
+
+    p = sub.add_parser(
+        "pd-parity",
+        help="P/D disaggregation: token parity + lower decode p95 stall",
+    )
+    p.add_argument("--page-size", type=int, default=8)
+    p.set_defaults(fn=check_pd_parity)
 
     p = sub.add_parser(
         "static-analysis",
